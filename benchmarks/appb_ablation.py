@@ -1,0 +1,40 @@
+"""Paper Appendix B: compression-block × group-selection size ablation on
+ShapeNet (reduced budget).  Reproduces the TREND of Table 5: ℓ=g=8 best,
+ℓ=g=32 catastrophically worse (selection granularity too coarse)."""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from benchmarks.common import emit, train_eval
+from repro.configs import get_config
+from repro.configs.base import _REGISTRY  # noqa: PLC2701 — bench-local registration
+
+GRID = [(4, 4), (8, 8), (16, 16), (32, 32), (4, 8), (8, 4)]
+
+
+def run(steps=40, grid=None):
+    rows = []
+    base = get_config("shapenet-bsa")
+    for ell, g in (grid or GRID):
+        bsa = dataclasses.replace(base.bsa, cmp_block=ell, slc_block=ell,
+                                  group_size=g)
+        name = f"shapenet-bsa-l{ell}-g{g}"
+        _REGISTRY[name] = lambda bsa=bsa, name=name: base.scaled(name=name, bsa=bsa)
+        r = train_eval(name, steps=steps, n_layers=2, d_model=128, batch=2,
+                       n_points=896)
+        rows.append(((ell, g), r))
+        emit(f"appb/l={ell},g={g}", r["us_per_call"], f"mse={r['mse']:.4f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args()
+    run(steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

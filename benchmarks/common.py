@@ -1,0 +1,85 @@
+"""Shared benchmark utilities: timing, CSV output, small training runs.
+
+CPU-budget note: this container is a single CPU core; benchmarks default to
+REDUCED settings (fewer layers/steps, subsampled clouds) that preserve the
+paper's comparisons (same attention configs, same relative measurements).
+Pass --full to the individual scripts for paper-scale runs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in µs (after jit warmup)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def forward_flops(api, batch) -> float:
+    """Analytic-by-compiler FLOPs of one forward call (single device)."""
+    try:
+        lowered = jax.jit(api.forward).lower(
+            jax.eval_shape(lambda k: api.init(k), jax.random.PRNGKey(0)),
+            jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch))
+        from repro.launch.hlo_analysis import HloModule
+        return HloModule(lowered.compile().as_text()).dot_flops()
+    except Exception:
+        return float("nan")
+
+
+def train_eval(arch: str, *, steps: int, n_layers: int, d_model: int,
+               batch: int, n_points: int, seed: int = 0,
+               dataset: str = "shapenet") -> dict:
+    """Train a reduced config of ``arch`` and return test MSE + timings."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.data import ElasticityDataset, ShapeNetCarDataset
+    from repro.models.api import model_api
+    from repro.runtime import Trainer, TrainerConfig
+
+    mcfg = get_config(arch).scaled(
+        n_layers=n_layers, d_model=d_model, n_heads=4, head_dim=d_model // 4,
+        n_kv_heads=4, d_ff=2 * d_model)
+    api = model_api(mcfg)
+    if dataset == "shapenet":
+        tr_ds = ShapeNetCarDataset("train", n_points=n_points)
+        te_ds = ShapeNetCarDataset("test", n_points=n_points)
+    else:
+        tr_ds = ElasticityDataset("train")
+        te_ds = ElasticityDataset("test")
+
+    cfg = TrainerConfig(base_lr=1e-3, weight_decay=0.01, total_steps=steps,
+                        warmup_steps=max(steps // 10, 1), log_every=10 ** 9)
+    t = Trainer(api, cfg)
+    params, _ = t.fit(tr_ds.batches(batch, seed=seed), steps=steps)
+
+    fwd = jax.jit(api.forward)
+    mse, n = 0.0, 0
+    for i, b in enumerate(te_ds.batches(batch, shuffle=False, epochs=1)):
+        if i >= 6:
+            break
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        pred = fwd(params, b)
+        m = b["mask"][..., None]
+        mse += float((((pred - b["target"]) ** 2) * m).sum() / m.sum())
+        n += 1
+    bt = {k: jnp.asarray(v) for k, v in next(tr_ds.batches(batch, seed=1)).items()}
+    us = time_fn(fwd, params, bt)
+    fl = forward_flops(api, bt)
+    return {"mse": mse / max(n, 1), "us_per_call": us, "gflops": fl / 1e9,
+            "params": sum(x.size for x in jax.tree.leaves(params))}

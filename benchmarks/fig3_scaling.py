@@ -1,0 +1,64 @@
+"""Paper Fig. 3 / App. C: attention runtime vs sequence length.
+
+One attention call (B=1, 4 heads, D=32), BSA vs Full Attention, N from 256
+up (default 8192 on this CPU; --max-n 65536 reproduces the paper's axis).
+The paper's claim: crossover near N≈4096, ~5× at 65536."""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import BSAConfig, bsa_attention, bsa_init, full_attention
+
+
+def run(max_n=8192, variants=("bsa", "full", "bsa-group-cmp")):
+    key = jax.random.PRNGKey(0)
+    H, D = 4, 32
+    cfg = BSAConfig(ball_size=256, cmp_block=8, top_k=4, group_size=8,
+                    jnp_chunk_tokens=1024)
+    cfg_gc = BSAConfig(ball_size=256, cmp_block=8, top_k=4, group_size=8,
+                       group_compression=True, phi="mlp", jnp_chunk_tokens=1024)
+    params = bsa_init(key, cfg, n_heads=H, n_kv_heads=H, head_dim=D, d_model=128)
+    params_gc = bsa_init(key, cfg_gc, n_heads=H, n_kv_heads=H, head_dim=D,
+                         d_model=128)
+    results = {}
+    n = 256
+    while n <= max_n:
+        q = jax.random.normal(key, (1, n, H, D))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, n, H, D))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, n, H, D))
+        row = {}
+        if "bsa" in variants:
+            f = jax.jit(lambda q, k, v: bsa_attention(params, q, k, v, cfg=cfg))
+            row["bsa"] = time_fn(f, q, k, v)
+        if "bsa-group-cmp" in variants:
+            f = jax.jit(lambda q, k, v: bsa_attention(params_gc, q, k, v, cfg=cfg_gc))
+            row["bsa-group-cmp"] = time_fn(f, q, k, v)
+        if "full" in variants and n <= 32768:
+            f = jax.jit(lambda q, k, v: full_attention(q, k, v))
+            row["full"] = time_fn(f, q, k, v)
+        for name, us in row.items():
+            emit(f"fig3/{name}/n={n}", us,
+                 f"speedup_vs_full={row.get('full', float('nan')) / us:.2f}")
+        results[n] = row
+        n *= 2
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-n", type=int, default=8192)
+    args = ap.parse_args()
+    res = run(max_n=args.max_n)
+    ns = sorted(res)
+    if "full" in res[ns[-1]] and "bsa" in res[ns[-1]]:
+        print(f"# crossover check: at N={ns[-1]} BSA is "
+              f"{res[ns[-1]]['full'] / res[ns[-1]]['bsa']:.2f}x faster than full")
+
+
+if __name__ == "__main__":
+    main()

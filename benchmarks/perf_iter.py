@@ -1,0 +1,169 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf iteration tool: lower ONE (arch × shape) cell with config/sharding
+overrides and report the three roofline terms + delta vs the recorded
+baseline.  Each hypothesis→change→measure cycle is one invocation.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch stablelm-1.6b \
+      --shape train_4k --layout dp --chunk 1024
+
+Overrides:
+  --layout {tp,dp}     dp = no tensor parallelism; batch shards over the
+                       WHOLE mesh (pod×data×model) and params go ZeRO/FSDP
+                       over all axes — the right mapping for small models
+  --chunk N            jnp_chunk_tokens override (0 = unchunked)
+  --attn-seq           attn_shard_mode=sequence (ball-parallel attention)
+  --topk N / --ell N   BSA selection/compression overrides
+  --window N           local window override
+  --fsdp               force FSDP params
+"""
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+
+def lower_with_overrides(arch, shape_name, *, mcfg=None, layout="tp",
+                         multi_pod=False):
+    """Variant of launch.dryrun.lower_cell accepting a modified mcfg/layout."""
+    import jax.numpy as jnp
+    from repro.distributed.params import (batch_shardings, cache_shardings,
+                                          opt_shardings, param_shardings)
+    from repro.distributed.sharding import axis_rules
+    from repro.launch.dryrun import shape_rules
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+    from repro.models.api import model_api
+    from repro.optim import adamw_init
+
+    mcfg = mcfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    api = model_api(mcfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules, seq_parallel = shape_rules(mcfg, shape, mesh)
+    if layout == "dp":
+        rules["batch"] = ("pod", "data", "model")
+        rules["seq_res"] = None          # no TP ⇒ no Megatron-SP residual
+        rules["heads"] = None
+        rules["d_ff"] = None
+        rules["vocab"] = None
+        rules["experts"] = None
+
+    B, N = shape.global_batch, shape.seq_len
+    params_struct = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_sh = param_shardings(params_struct, mesh, zero1=mcfg.fsdp or layout == "dp",
+                           tp=layout == "tp")
+    with mesh, axis_rules(mesh, rules):
+        if shape.kind == "train":
+            opt_struct = jax.eval_shape(
+                lambda p: adamw_init(p, state_dtype=jnp.dtype(mcfg.opt_state_dtype)),
+                params_struct)
+            o_sh = opt_shardings(opt_struct, mesh, tp=layout == "tp")
+            bspec = api.batch_specs(B, N)
+            b_sh = batch_shardings(bspec, mesh, seq_parallel=seq_parallel,
+                                   full_dp=layout == "dp")
+            lowered = jax.jit(make_train_step(api), in_shardings=(p_sh, o_sh, b_sh),
+                              donate_argnums=(0, 1)).lower(
+                params_struct, opt_struct, bspec)
+        elif shape.kind == "prefill":
+            bspec = api.batch_specs(B, N)
+            b_sh = batch_shardings(bspec, mesh, seq_parallel=seq_parallel,
+                                   full_dp=layout == "dp")
+            lowered = jax.jit(make_prefill_step(api), in_shardings=(p_sh, b_sh)).lower(
+                params_struct, bspec)
+        else:
+            cspec = api.cache_specs(B, N)
+            c_sh = cache_shardings(cspec, mesh, seq_parallel=seq_parallel)
+            tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+            t_sh = batch_shardings(tok, mesh)
+            lowered = jax.jit(make_serve_step(api), in_shardings=(p_sh, c_sh, t_sh),
+                              donate_argnums=(1,)).lower(params_struct, cspec, tok)
+    return lowered, mesh
+
+
+def measure(lowered, mesh) -> dict:
+    compiled = lowered.compile()
+    hh = analyze_hlo(compiled.as_text())
+    ma = compiled.memory_analysis()
+    comp = hh["dot_flops_weighted"] / PEAK_FLOPS_BF16
+    mem = hh["traffic_bytes_weighted"] / HBM_BW
+    coll = hh["collective_wire_bytes"] / ICI_BW_PER_LINK
+    peak = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    upcast = min(hh["bf16_upcast_bytes"], ma.temp_size_in_bytes)
+    return {
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": max(("compute", comp), ("memory", mem),
+                        ("collective", coll), key=lambda t: t[1])[0],
+        "bound_s": max(comp, mem, coll),
+        "roofline_fraction": comp / max(comp, mem, coll),
+        "peak_tpu_gib": max(peak - upcast,
+                            ma.argument_size_in_bytes) / 2**30,
+        "collectives": {k: round(v["bytes"] / 2**20)
+                        for k, v in hh["collectives"].items()},
+    }
+
+
+def apply_overrides(mcfg, args):
+    bsa = mcfg.bsa
+    kw = {}
+    if args.chunk is not None:
+        kw["jnp_chunk_tokens"] = args.chunk
+    if args.topk:
+        kw["top_k"] = args.topk
+    if args.ell:
+        kw["cmp_block"] = args.ell
+        kw["slc_block"] = args.ell
+    if args.window:
+        kw["local_window"] = args.window
+    if kw:
+        bsa = dataclasses.replace(bsa, **kw)
+    m = {}
+    if args.attn_seq:
+        m["attn_shard_mode"] = "sequence"
+    if args.fsdp:
+        m["fsdp"] = True
+    return mcfg.scaled(bsa=bsa, **m)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layout", default="tp", choices=["tp", "dp"])
+    ap.add_argument("--chunk", type=int, default=None)
+    ap.add_argument("--topk", type=int, default=0)
+    ap.add_argument("--ell", type=int, default=0)
+    ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--attn-seq", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    mcfg = apply_overrides(get_config(args.arch), args)
+    lowered, mesh = lower_with_overrides(args.arch, args.shape, mcfg=mcfg,
+                                         layout=args.layout)
+    m = measure(lowered, mesh)
+    base_p = Path(f"results/dryrun/{args.arch}__{args.shape}__pod1.json")
+    base = json.loads(base_p.read_text()) if base_p.exists() else None
+    print(json.dumps({"tag": args.tag or "iter", **m}, indent=1))
+    if base and base.get("ok"):
+        b_comp = base["flops_per_device"] / PEAK_FLOPS_BF16
+        b_mem = base["traffic_bytes_per_device"] / HBM_BW
+        b_coll = base["collective_wire_bytes"] / ICI_BW_PER_LINK
+        b_bound = max(b_comp, b_mem, b_coll)
+        print(f"baseline bound {b_bound*1e3:.1f} ms → now {m['bound_s']*1e3:.1f} ms "
+              f"({b_bound/max(m['bound_s'],1e-12):.2f}x better); "
+              f"roofline frac {b_comp/max(b_bound,1e-12):.3f} → {m['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

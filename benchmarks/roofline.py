@@ -1,0 +1,136 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh)
+from the dry-run artifacts, dominant bottleneck, MODEL_FLOPS ratio.
+
+  compute term    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16, v5e)
+  memory term     = HLO_bytes_per_device / 819 GB/s HBM
+  collective term = wire_bytes_per_device / 50 GB/s/link ICI (1-link, conservative)
+
+HLO numbers are loop-WEIGHTED per-device values from launch/hlo_analysis
+(cost_analysis counts while bodies once — calibrated in EXPERIMENTS §Dry-run).
+`roofline fraction` = compute / max(terms): 1.0 ⇒ compute-bound (at roofline
+under perfect comm/compute overlap); < 1 ⇒ the dominant term is the gap.
+
+Reads results/dryrun/*.json; writes results/roofline.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from repro.models.api import model_api
+
+_COUNT_CACHE = {}
+
+
+def param_counts(arch: str) -> tuple[int, int]:
+    """(total, active) parameter counts (active: MoE experts scaled k/E,
+    embeddings excluded from both — 6ND convention)."""
+    if arch in _COUNT_CACHE:
+        return _COUNT_CACHE[arch]
+    mcfg = get_config(arch)
+    api = model_api(mcfg)
+    tree = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    total = active = 0
+    for path, leaf in flat:
+        names = [str(getattr(k, "key", k)) for k in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if any(x in names for x in ("embed", "tok_embed", "lm_head")):
+            continue
+        total += n
+        if any(x in names for x in ("w_gate", "w_up", "w_down")):
+            Ep = max(mcfg.pad_experts_to, mcfg.n_experts)
+            active += n * mcfg.experts_per_token / Ep
+        else:
+            active += n
+    _COUNT_CACHE[arch] = (total, int(active))
+    return _COUNT_CACHE[arch]
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N_active·D for training, 2·N_active·D for prefill/decode (global)."""
+    shape = SHAPES[shape_name]
+    _, active = param_counts(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch          # decode: 1 token/slot
+
+
+def analyze_cell(rec: dict) -> dict:
+    comp = rec["flops_per_device"] / PEAK_FLOPS_BF16
+    mem = rec["traffic_bytes_per_device"] / HBM_BW
+    coll = rec["collective_wire_bytes"] / ICI_BW_PER_LINK
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = rec["flops_per_device"] * rec["n_devices"]
+    return {
+        **rec,
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dom,
+        "roofline_fraction": comp / max(max(terms.values()), 1e-30),
+        "model_flops": mf,
+        "useful_ratio": mf / max(hlo_global, 1e-30),
+    }
+
+
+def load_cells(dry_dir: Path, mesh: str = "pod1") -> list[dict]:
+    cells = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            p = dry_dir / f"{arch}__{shape}__{mesh}.json"
+            if not p.exists():
+                continue
+            rec = json.loads(p.read_text())
+            if rec.get("ok"):
+                cells.append(analyze_cell(rec))
+    return cells
+
+
+def render_markdown(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | roofline frac | useful FLOP ratio | peak/dev GiB (tpu-est) | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in cells:
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']*1e3:.2f} | "
+            f"{c['memory_s']*1e3:.2f} | {c['collective_s']*1e3:.2f} | "
+            f"{c['dominant']} | {c['roofline_fraction']:.3f} | "
+            f"{c['useful_ratio']:.3f} | {c['peak_bytes_tpu_est']/2**30:.2f} | "
+            f"{'✓' if c['fits_hbm'] else '✗'} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod1")
+    ap.add_argument("--out", default="results/roofline.md")
+    args = ap.parse_args()
+    cells = load_cells(Path(args.dry_dir), args.mesh)
+    md = render_markdown(cells)
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(md)
+    print(md)
+    # CSV lines for run.py
+    for c in cells:
+        print(f"roofline/{c['arch']}/{c['shape']},"
+              f"{max(c['compute_s'], c['memory_s'], c['collective_s'])*1e6:.1f},"
+              f"dom={c['dominant']};frac={c['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick|--full]
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--max-n", type=int, default=4096)
+    ap.add_argument("--skip", default="", help="comma list: table1,table2,fig3,appb,roofline")
+    args = ap.parse_args()
+    skip = set(args.skip.split(","))
+    failures = []
+
+    def section(name, fn):
+        if name in skip:
+            return
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — report all benches
+            failures.append((name, e))
+            traceback.print_exc()
+
+    from benchmarks import appb_ablation, fig3_scaling, table1_shapenet, table2_elasticity
+    section("table1+3 (ShapeNet variants)", lambda: table1_shapenet.run(steps=args.steps))
+    section("table2 (Elasticity)", lambda: table2_elasticity.run(steps=args.steps))
+    section("fig3 (runtime scaling)", lambda: fig3_scaling.run(max_n=args.max_n))
+    section("appB (block-size ablation)",
+            lambda: appb_ablation.run(steps=max(args.steps // 2, 10),
+                                      grid=[(4, 4), (8, 8), (32, 32)]))
+
+    def _roof():
+        from benchmarks import roofline
+        from pathlib import Path
+        cells = roofline.load_cells(Path("results/dryrun"))
+        if not cells:
+            print("# (no dry-run artifacts; run repro.launch.dryrun first)")
+            return
+        for c in cells:
+            print(f"roofline/{c['arch']}/{c['shape']},"
+                  f"{max(c['compute_s'], c['memory_s'], c['collective_s'])*1e6:.1f},"
+                  f"dom={c['dominant']};frac={c['roofline_fraction']:.3f}")
+    section("roofline (from dry-run)", _roof)
+
+    if failures:
+        print("FAILURES:", [n for n, _ in failures])
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table 1 + Table 3 (ShapeNet): MSE / runtime / GFLOPs for BSA
+variants vs Full Attention vs Erwin on the (synthetic) ShapeNet-Car task.
+
+Reduced budget by default (CPU container); --full approaches paper scale.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, train_eval
+
+VARIANTS = [
+    ("shapenet-bsa", "BSA"),
+    ("shapenet-bsa-no-group", "BSA w/o group selection"),
+    ("shapenet-bsa-group-cmp", "BSA w/ group compression"),
+    ("shapenet-full", "Full Attention"),
+    ("shapenet-erwin", "Erwin (BTA+coarsen)"),
+]
+
+
+def run(steps=60, n_layers=2, d_model=128, batch=2, n_points=896, variants=None):
+    rows = []
+    for arch, label in (variants or VARIANTS):
+        r = train_eval(arch, steps=steps, n_layers=n_layers, d_model=d_model,
+                       batch=batch, n_points=n_points)
+        rows.append((arch, label, r))
+        emit(f"table1/{arch}", r["us_per_call"],
+             f"mse={r['mse']:.4f};gflops={r['gflops']:.2f};params={r['params']}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+    if args.full:
+        run(steps=args.steps or 2000, n_layers=18, d_model=256, batch=4,
+            n_points=3586)
+    else:
+        run(steps=args.steps or 60)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Table 2: Elasticity stress-field RMSE — BSA vs Full Attention.
+(Sequence length 972 → 1024; the paper notes BSA shows no advantage at this
+scale, which the cost numbers reproduce.)"""
+
+from __future__ import annotations
+
+import argparse
+import math
+
+from benchmarks.common import emit, train_eval
+
+
+def run(steps=60, n_layers=2, d_model=128, batch=2):
+    rows = []
+    for arch, label in [("elasticity-bsa", "BSA"), ("elasticity-full", "Full")]:
+        r = train_eval(arch, steps=steps, n_layers=n_layers, d_model=d_model,
+                       batch=batch, n_points=972, dataset="elasticity")
+        rows.append((arch, label, r))
+        emit(f"table2/{arch}", r["us_per_call"],
+             f"rmse={math.sqrt(r['mse']):.4f};gflops={r['gflops']:.2f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    run(steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpointing: sharded npz + JSON manifest, async writer,
+atomic renames, keep-last-k pruning, and RESHARD-ON-RESTORE (elastic
+restarts onto a different mesh).
+
+Layout:
+  <dir>/step_000100.tmp/          (written, then atomically renamed)
+  <dir>/step_000100/
+      manifest.json               tree structure, shapes, dtypes, step
+      proc00.npz                  this process's addressable shards
+
+On a real multi-host cluster each process saves only its addressable shards
+(`jax.experimental.multihost_utils` barrier before rename); this container
+is single-process so proc00 holds everything — the layout and restore path
+are identical.  Restore takes target shardings and `device_put`s each leaf,
+which is exactly the elastic re-shard: save on mesh A, restore on mesh B.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def latest_step(ckpt_dir) -> int | None:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.iterdir()
+             if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir, *, keep_last: int = 3, async_save: bool = True):
+        self.dir = Path(ckpt_dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self.save_count = 0
+
+    # ---------------- save ----------------
+
+    def save(self, step: int, state, *, extra: dict | None = None,
+             block: bool = False):
+        """Snapshot ``state`` (pytree of jax/np arrays) at ``step``."""
+        self.wait()  # double-buffer: never two in-flight writes
+        flat, _ = _flatten(state)
+        # materialise on host NOW (cheap np views) so training can proceed
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        meta = {
+            "step": int(step),
+            "extra": extra or {},
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+            "time": time.time(),
+        }
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, meta)
+
+    def _write(self, step: int, host: dict, meta: dict):
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "proc00.npz", **host)
+        (tmp / "manifest.json").write_text(json.dumps(meta))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)            # atomic publish
+        self.save_count += 1
+        self._prune()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _prune(self):
+        steps = sorted(int(p.name.split("_")[1]) for p in self.dir.iterdir()
+                       if p.is_dir() and p.name.startswith("step_")
+                       and not p.name.endswith(".tmp"))
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ---------------- restore ----------------
+
+    def restore(self, template, *, step: int | None = None, shardings=None):
+        """Restore into the structure of ``template``.  ``shardings`` (same
+        pytree structure, optional) re-shards on load — elastic restart."""
+        if step is None:
+            step = latest_step(self.dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        meta = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "proc00.npz")
+        flat_t, treedef = _flatten(template)
+        flat_s, _ = _flatten(shardings) if shardings is not None else ({}, None)
+        leaves = []
+        for key in flat_t:
+            arr = data[key]
+            want = flat_t[key]
+            if tuple(arr.shape) != tuple(want.shape):
+                raise ValueError(f"{key}: ckpt {arr.shape} != template {want.shape}")
+            arr = arr.astype(want.dtype)
+            if key in flat_s:
+                arr = jax.device_put(arr, flat_s[key])
+            leaves.append(arr)
+        state = jax.tree_util.tree_unflatten(treedef, leaves)
+        return state, meta

@@ -1,0 +1,138 @@
+"""Model / shape configuration schema and registry.
+
+``ModelConfig`` describes every architecture in the assigned pool plus the
+paper's own point-cloud model.  ``SHAPES`` are the four assigned input-shape
+cells; ``input_specs`` builds ShapeDtypeStruct stand-ins for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.config import BSAConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | vlm | hybrid | audio | pointcloud
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 ⇒ d_model // n_heads
+
+    # --- attention backend ---
+    attention: str = "bsa"           # bsa | full | erwin
+    bsa: BSAConfig = dataclasses.field(default_factory=BSAConfig)
+    rope_theta: float = 1e4
+
+    # --- MoE ---
+    moe: bool = False
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim
+    n_shared_experts: int = 0        # Qwen-style fused shared expert (dim = n·moe_d_ff)
+    moe_period: int = 1              # MoE FFN every `moe_period` layers
+    capacity_factor: float = 1.25
+    # EP alignment: pad the expert STACK to this count with inert experts the
+    # router can never select (router stays n_experts wide).  E.g. qwen's 60
+    # experts pad to 64 so the 16-way model axis shards them 4-per-device —
+    # without this the dispatch buffer and expert weights replicate.
+    pad_experts_to: int = 0
+
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    attn_period: int = 0             # hybrid: one attention layer per this many (0 ⇒ pure)
+
+    # --- encoder-decoder / multimodal ---
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    dec_ratio: int = 8               # enc-dec: decoder len = seq_len // dec_ratio
+    vision_tokens: int = 0           # VLM: patch-embedding stub length
+    d_frontend: int = 0              # stubbed modality embedding dim
+
+    # --- numerics / misc ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True               # activation checkpointing per layer-period
+
+    # --- sharding ---
+    attn_shard_mode: str = "head"    # head | sequence (for head counts ∤ TP)
+    fsdp: bool = False               # ALSO shard params over DP (ZeRO-3) —
+                                     # required when params/TP > HBM (jamba 398B)
+    opt_state_dtype: str = "float32" # bf16 for the 398B config (fits HBM; see DESIGN)
+
+    # --- point cloud (paper model) ---
+    in_dim: int = 0                  # per-point input features
+    out_dim: int = 0                 # regression targets per point
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def scaled(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+ARCH_IDS = [
+    "granite-20b", "tinyllama-1.1b", "phi4-mini-3.8b", "stablelm-1.6b",
+    "qwen2-moe-a2.7b", "phi3.5-moe-42b-a6.6b", "mamba2-1.3b",
+    "llava-next-34b", "jamba-1.5-large-398b", "seamless-m4t-medium",
+]
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        mod = name.replace("-", "_").replace(".", "_")
+        try:
+            importlib.import_module(f"repro.configs.{mod}")
+        except ModuleNotFoundError:
+            # paper-model variants all live in shapenet_bsa.py
+            importlib.import_module("repro.configs.shapenet_bsa")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)

@@ -1,0 +1,11 @@
+"""granite-20b [dense] — llama-arch, code [arXiv:2405.04324; hf]."""
+from repro.configs.base import ModelConfig, register
+from repro.configs.presets import LM_BSA
+
+
+@register("granite-20b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-20b", family="dense", n_layers=52, d_model=6144,
+        n_heads=48, n_kv_heads=1, head_dim=128, d_ff=24576, vocab_size=49152,
+        attention="bsa", bsa=LM_BSA)

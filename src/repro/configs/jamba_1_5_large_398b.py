@@ -1,0 +1,16 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attn 1:7 interleave, MoE 16e top-2
+[arXiv:2403.19887; hf].  Optimizer states kept in bf16 so the 398B config
+fits 16 GB/chip HBM on a single pod (DESIGN §7 / EXPERIMENTS §Dry-run)."""
+from repro.configs.base import ModelConfig, register
+from repro.configs.presets import LM_BSA
+
+
+@register("jamba-1.5-large-398b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b", family="hybrid", n_layers=72, d_model=8192,
+        n_heads=64, n_kv_heads=8, head_dim=128, d_ff=24576, vocab_size=65536,
+        moe=True, n_experts=16, experts_per_token=2, moe_d_ff=24576,
+        moe_period=2, attn_period=8,
+        ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+        attention="bsa", bsa=LM_BSA, opt_state_dtype="bfloat16", fsdp=True)

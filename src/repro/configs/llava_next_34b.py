@@ -1,0 +1,18 @@
+"""llava-next-34b [vlm] — anyres tiling [hf:llava-hf/llava-v1.6; unverified].
+
+Vision frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings (d=1024, CLIP-L-scale); projector + backbone
+are real.  56 heads are not divisible by the 16-way model axis → attention
+shards by SEQUENCE (balls are independent ⇒ BSA allows TP-axis sequence
+sharding; DESIGN §4) while the FFN stays tensor-parallel."""
+from repro.configs.base import ModelConfig, register
+from repro.configs.presets import LM_BSA
+
+
+@register("llava-next-34b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b", family="vlm", n_layers=60, d_model=7168,
+        n_heads=56, n_kv_heads=8, head_dim=128, d_ff=20480, vocab_size=64000,
+        vision_tokens=512, d_frontend=1024,
+        attention="bsa", bsa=LM_BSA, attn_shard_mode="sequence")

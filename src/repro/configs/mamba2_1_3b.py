@@ -1,0 +1,14 @@
+"""mamba2-1.3b [ssm] — SSD (state-space duality) [arXiv:2405.21060; unverified].
+
+BSA is attention-specific and does NOT apply to this attention-free arch
+(DESIGN.md §Arch-applicability); the arch is implemented faithfully with the
+chunked SSD algorithm, which is itself sub-quadratic (long_500k runs)."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("mamba2-1.3b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b", family="ssm", n_layers=48, d_model=2048,
+        n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=50280,
+        ssm_state=128, ssm_head_dim=64, ssm_expand=2, attention="none")

@@ -1,0 +1,11 @@
+"""phi4-mini-3.8b [dense] — RoPE SwiGLU GQA [arXiv:2412.08905; hf]."""
+from repro.configs.base import ModelConfig, register
+from repro.configs.presets import LM_BSA
+
+
+@register("phi4-mini-3.8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi4-mini-3.8b", family="dense", n_layers=32, d_model=3072,
+        n_heads=24, n_kv_heads=8, head_dim=128, d_ff=8192, vocab_size=200064,
+        attention="bsa", bsa=LM_BSA)

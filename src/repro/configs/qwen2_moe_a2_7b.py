@@ -1,0 +1,13 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B]."""
+from repro.configs.base import ModelConfig, register
+from repro.configs.presets import LM_BSA
+
+
+@register("qwen2-moe-a2.7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b", family="moe", n_layers=24, d_model=2048,
+        n_heads=16, n_kv_heads=16, head_dim=128, d_ff=1408, vocab_size=151936,
+        moe=True, n_experts=60, experts_per_token=4, moe_d_ff=1408,
+        n_shared_experts=4, moe_period=1, pad_experts_to=64,
+        attention="bsa", bsa=LM_BSA)

@@ -1,0 +1,16 @@
+"""seamless-m4t-medium [audio] — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+Audio frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings.  Encoder self-attention uses NON-CAUSAL BSA —
+the paper's true point-set form on 1-D frames; decoder uses causal BSA."""
+from repro.configs.base import ModelConfig, register
+from repro.configs.presets import LM_BSA
+
+
+@register("seamless-m4t-medium")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium", family="audio", n_layers=12, d_model=1024,
+        n_heads=16, n_kv_heads=16, head_dim=64, d_ff=4096, vocab_size=256206,
+        is_encoder_decoder=True, n_encoder_layers=12, d_frontend=1024,
+        dec_ratio=8, attention="bsa", bsa=LM_BSA)

@@ -1,0 +1,12 @@
+"""Ball Sparse Attention — the paper's primary contribution."""
+
+from repro.core.config import BSAConfig  # noqa: F401
+from repro.core.bsa import bsa_init, bsa_attention, ball_attention_ref  # noqa: F401
+from repro.core.nsa_causal import (  # noqa: F401
+    nsa_init,
+    nsa_causal_attention,
+    init_decode_cache,
+    nsa_causal_decode,
+)
+from repro.core.full_attention import full_attention  # noqa: F401
+from repro.core.erwin import erwin_attention  # noqa: F401

@@ -1,0 +1,92 @@
+"""Ball-tree construction (Erwin-style) for imposing regularity on point sets.
+
+The tree is built by recursive median bisection along the axis of largest
+extent.  The *only* artifact the model consumes is a permutation that sorts
+points into ball order: after permutation, every contiguous chunk of
+``ball_size`` points is one ball (a spatially compact neighborhood), and the
+chunks at coarser powers of two are the higher tree levels.
+
+Tree construction is data preprocessing (host-side, numpy) — exactly as in
+Erwin, where the tree is built on CPU and attention runs on contiguous
+chunks.  Everything inside ``jit`` then operates on fixed-shape, ball-ordered
+sequences.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "build_balltree_permutation",
+    "ball_order",
+    "pad_to_multiple",
+    "ball_ids",
+]
+
+
+def _bisect(points: np.ndarray, idx: np.ndarray, out: list[np.ndarray], leaf_size: int) -> None:
+    """Recursively median-split ``idx`` along the longest axis until leaves
+    have at most ``leaf_size`` points; append leaf index arrays to ``out``."""
+    if idx.shape[0] <= leaf_size:
+        out.append(idx)
+        return
+    pts = points[idx]
+    extent = pts.max(axis=0) - pts.min(axis=0)
+    axis = int(np.argmax(extent))
+    order = np.argsort(pts[:, axis], kind="stable")
+    half = idx.shape[0] // 2
+    # split into two equal halves (median split); odd remainder goes left
+    left = idx[order[: half + (idx.shape[0] % 2)]]
+    right = idx[order[half + (idx.shape[0] % 2):]]
+    _bisect(points, left, out, leaf_size)
+    _bisect(points, right, out, leaf_size)
+
+
+def build_balltree_permutation(points: np.ndarray, ball_size: int) -> np.ndarray:
+    """Return ``perm`` such that ``points[perm]`` is in ball order.
+
+    ``points``: (N, D) float array.  ``ball_size`` must be a power of two for
+    the tree levels to nest; N need NOT be a multiple of ball_size — pad the
+    *permuted* sequence afterwards (see :func:`pad_to_multiple`).
+    """
+    points = np.asarray(points)
+    if points.ndim != 2:
+        raise ValueError(f"points must be (N, D), got {points.shape}")
+    n = points.shape[0]
+    if ball_size < 1 or (ball_size & (ball_size - 1)) != 0:
+        raise ValueError(f"ball_size must be a positive power of two, got {ball_size}")
+    idx = np.arange(n, dtype=np.int64)
+    leaves: list[np.ndarray] = []
+    _bisect(points, idx, leaves, ball_size)
+    return np.concatenate(leaves)
+
+
+def ball_order(points: np.ndarray, features: np.ndarray, ball_size: int):
+    """Convenience: permute ``features`` (and points) into ball order.
+
+    Returns (points_perm, features_perm, perm, inv_perm)."""
+    perm = build_balltree_permutation(points, ball_size)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0])
+    return points[perm], features[perm], perm, inv
+
+
+def pad_to_multiple(x: np.ndarray, multiple: int, axis: int = 0, value: float = 0.0):
+    """Pad ``x`` along ``axis`` to the next multiple; returns (padded, mask).
+
+    mask is (padded_len,) bool — True for real tokens."""
+    n = x.shape[axis]
+    target = ((n + multiple - 1) // multiple) * multiple
+    pad = target - n
+    mask = np.zeros((target,), dtype=bool)
+    mask[:n] = True
+    if pad == 0:
+        return x, mask
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return np.pad(x, widths, constant_values=value), mask
+
+
+def ball_ids(seq_len: int, ball_size: int) -> np.ndarray:
+    """ball id per position for a ball-ordered sequence of ``seq_len``."""
+    return np.arange(seq_len) // ball_size

@@ -1,0 +1,260 @@
+"""Ball Sparse Attention (BSA) — the paper's contribution, non-causal form.
+
+Operates on ball-ordered point sequences (see ``core/balltree.py``): after the
+ball-tree permutation, every contiguous chunk of ``ball_size`` tokens is a
+spatially compact ball.  Three branches (paper Eq. 9):
+
+  * ``ball`` — Ball-Tree Attention: full attention inside each ball,
+  * ``cmp``  — compression: queries attend to φ-pooled coarse KV blocks,
+  * ``slc``  — selection: per query *group*, top-k coarse blocks are fetched
+               at token resolution and attended exactly,
+
+combined with sigmoid gates.  Group selection (Eq. 10–12), query-coarsened
+scoring (Eq. 13–14), group compression (Eq. 15) and own-ball masking (§3.2)
+are all implemented and switchable via :class:`repro.core.config.BSAConfig`.
+
+All functions are shape-polymorphic over GQA: q has ``Hq = Hkv * rep`` heads.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.branches import (
+    NEG_INF,
+    block_validity,
+    chunked_q_attention,
+    gate_values,
+    gates_init,
+    mask_to_bias,
+    phi_apply,
+    phi_init,
+    repeat_kv,
+    sdpa,
+    selection_attend,
+)
+from repro.core.config import BSAConfig
+
+__all__ = ["bsa_init", "bsa_attention", "ball_attention_ref"]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def bsa_init(key, cfg: BSAConfig, *, n_heads: int, n_kv_heads: int, head_dim: int,
+             d_model: int, param_dtype=jnp.float32) -> dict:
+    kk, kv, kq, kg = jax.random.split(key, 4)
+    params = {
+        "phi_k": phi_init(kk, cfg, head_dim, param_dtype=param_dtype),
+        "phi_v": phi_init(kv, cfg, head_dim, param_dtype=param_dtype),
+        "gates": gates_init(kg, cfg, n_heads, d_model, param_dtype=param_dtype),
+    }
+    if cfg.query_cmp_selection or cfg.group_compression:
+        params["phi_q"] = phi_init(kq, cfg, head_dim, param_dtype=param_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Branch 1 — Ball-Tree Attention (block-diagonal)
+# ---------------------------------------------------------------------------
+
+def ball_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       mask: jnp.ndarray | None, ball_size: int,
+                       chunk_balls: int = 0) -> jnp.ndarray:
+    """Full attention within each contiguous ball.  Pure-jnp reference.
+    ``chunk_balls`` > 0 processes balls in lax.map tiles (memory bound)."""
+    B, N, H, D = q.shape
+    m = ball_size
+    assert N % m == 0, f"N={N} not a multiple of ball_size={m}"
+    nb = N // m
+    qb = q.reshape(B, nb, m, H, D).transpose(0, 1, 3, 2, 4)      # (B,nb,H,m,D)
+    kb = k.reshape(B, nb, m, H, D).transpose(0, 1, 3, 2, 4)
+    vb = v.reshape(B, nb, m, H, D).transpose(0, 1, 3, 2, 4)
+    mb = mask.reshape(B, nb, 1, 1, m) if mask is not None else None
+
+    def attend(qc, kc, vc, mc):
+        return sdpa(qc, kc, vc, mask_to_bias(mc) if mc is not None else None)
+
+    if chunk_balls and nb % chunk_balls == 0 and nb > chunk_balls:
+        nc = nb // chunk_balls
+        resh = lambda t: t.reshape(B, nc, chunk_balls, *t.shape[2:]).transpose(
+            1, 0, *range(2, t.ndim + 1))
+        if mb is not None:
+            out = jax.lax.map(jax.checkpoint(lambda t: attend(t[0], t[1], t[2], t[3])),
+                              (resh(qb), resh(kb), resh(vb), resh(mb)))
+        else:
+            out = jax.lax.map(jax.checkpoint(lambda t: attend(t[0], t[1], t[2], None)),
+                              (resh(qb), resh(kb), resh(vb)))
+        out = out.transpose(1, 0, *range(2, out.ndim)).reshape(B, nb, H, m, D)
+    else:
+        out = attend(qb, kb, vb, mb)                              # (B,nb,H,m,D)
+    return out.transpose(0, 1, 3, 2, 4).reshape(B, N, H, D)
+
+
+def _ball_branch(q, k, v, mask, cfg: BSAConfig):
+    rep = q.shape[2] // k.shape[2]
+    kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        return kops.ball_attention(q, kf, vf, mask, cfg.ball_size)
+    cb = max(cfg.jnp_chunk_tokens // cfg.ball_size, 1) if cfg.jnp_chunk_tokens else 0
+    return ball_attention_ref(q, kf, vf, mask, cfg.ball_size, chunk_balls=cb)
+
+
+# ---------------------------------------------------------------------------
+# Branch 2 — Compression
+# ---------------------------------------------------------------------------
+
+def _compression_branch(params, q, k, v, mask, cfg: BSAConfig):
+    """Returns (out, k_cmp, v_cmp, blk_valid). out: (B, N, Hq, D)."""
+    B, N, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    k_cmp = phi_apply(params["phi_k"], k, mask, cfg)              # (B,NB,Hkv,D)
+    v_cmp = phi_apply(params["phi_v"], v, mask, cfg)
+    blk_valid = block_validity(mask, B, N, cfg.cmp_block)          # (B,NB)
+    kf, vf = repeat_kv(k_cmp, rep), repeat_kv(v_cmp, rep)          # (B,NB,Hq,D)
+    bias = mask_to_bias(blk_valid[:, None, None, :])               # (B,1,1,NB)
+
+    if cfg.group_compression:
+        # Eq. 15: pool queries too; attend at block level; repeat ℓ×.
+        q_cmp = phi_apply(params["phi_q"], q, mask, cfg)           # (B,NB,Hq,D)
+        out_c = _dense_attention(q_cmp, kf, vf, bias, cfg)         # (B,NB,Hq,D)
+        out = jnp.repeat(out_c, cfg.cmp_block, axis=1)             # (B,N,Hq,D)
+        return out, k_cmp, v_cmp, blk_valid
+
+    out = _dense_attention(q, kf, vf, bias, cfg, key_valid=blk_valid)
+    return out, k_cmp, v_cmp, blk_valid
+
+
+def _dense_attention(q, k, v, bias, cfg: BSAConfig, key_valid=None):
+    """q: (B,M,H,D) vs k,v: (B,L,H,D); bias broadcastable to (B,H,M,L)."""
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, bias=bias)
+    if cfg.jnp_chunk_tokens and key_valid is not None:
+        return chunked_q_attention(q, k, v, key_valid=key_valid,
+                                   chunk=cfg.jnp_chunk_tokens)
+    qh = q.transpose(0, 2, 1, 3)                                   # (B,H,M,D)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    out = sdpa(qh, kh, vh, bias)
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Branch 3 — Selection
+# ---------------------------------------------------------------------------
+
+def _selection_scores(params, q, k_cmp, blk_valid, mask, cfg: BSAConfig):
+    """Group-level importance scores.
+
+    Returns (scores, n_groups, rows_are_blocks):
+      scores: (B, G, Hkv, NB) fp32, already masked (invalid block / own ball).
+    """
+    B, N, Hq, D = q.shape
+    Hkv = k_cmp.shape[2]
+    rep = Hq // Hkv
+    nb = k_cmp.shape[1]
+    ell = cfg.cmp_block
+    g = cfg.group_size if cfg.group_size else 1
+
+    if cfg.query_cmp_selection and cfg.group_size:
+        # Eq. 13–14: score with φ-pooled queries (block granularity);
+        # q-heads within each GQA group are summed (NSA: shared fetch per group)
+        q_s = phi_apply(params["phi_q"], q, mask, cfg)             # (B,NB,Hq,D)
+        s = _diag_scores(q_s, k_cmp, rep)                           # (B,NB,Hkv,NB)
+        rows_per_group = max(g // ell, 1)
+        G = nb // rows_per_group
+        s = s.reshape(B, G, rows_per_group, Hkv, nb).mean(axis=2)   # Eq. 12 mean
+    else:
+        # token-level scores; optional group averaging (Eq. 10–12)
+        s = _diag_scores(q, k_cmp, rep)                             # (B,N,Hkv,NB)
+        if cfg.group_size:
+            G = N // g
+            s = s.reshape(B, G, g, k_cmp.shape[2], nb).mean(axis=2)
+        else:
+            G = N
+    s = s / (D ** 0.5)
+
+    # mask invalid blocks
+    s = jnp.where(blk_valid[:, None, None, :], s, NEG_INF)
+    if cfg.mask_own_ball:
+        tokens_per_group = N // s.shape[1]
+        grp_ball = (jnp.arange(s.shape[1]) * tokens_per_group) // cfg.ball_size
+        blk_ball = (jnp.arange(nb) * ell) // cfg.ball_size
+        own = grp_ball[:, None] == blk_ball[None, :]                # (G,NB)
+        s = jnp.where(own[None, :, None, :], NEG_INF, s)
+    return s
+
+
+def _diag_scores(q, k_cmp, rep):
+    """q: (B,M,Hq,D), k_cmp: (B,NB,Hkv,D) -> (B,M,Hkv,NB), summing the
+    ``rep`` q-heads of each GQA group (NSA's shared-importance trick)."""
+    B, M, Hq, D = q.shape
+    Hkv = k_cmp.shape[2]
+    qg = q.reshape(B, M, Hkv, Hq // Hkv, D)
+    return jnp.einsum("bmkrd,bnkd->bmkn", qg.astype(jnp.float32),
+                      k_cmp.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+def _selection_branch(params, q, k, v, k_cmp, blk_valid, mask, cfg: BSAConfig):
+    """Top-k block gather + exact attention.  Returns (out, indices)."""
+    B, N, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    ell = cfg.cmp_block
+    nb = N // ell
+
+    scores = _selection_scores(params, q, k_cmp, blk_valid, mask, cfg)  # (B,G,Hkv,NB)
+    G = scores.shape[1]
+    g = N // G
+    k_star = min(cfg.top_k, nb)
+    top_vals, top_idx = jax.lax.top_k(scores, k_star)              # (B,G,Hkv,k*)
+    sel_valid = top_vals > NEG_INF / 2                              # (B,G,Hkv,k*)
+
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        out = kops.selection_attention(q, k, v, top_idx, sel_valid, mask,
+                                       block_size=ell, group_size=g)
+        return out, top_idx
+
+    out = selection_attend(q, k, v, top_idx, sel_valid, mask, cfg)
+    return out, top_idx
+
+
+# ---------------------------------------------------------------------------
+# Full BSA
+# ---------------------------------------------------------------------------
+
+def bsa_attention(params: dict, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, cfg: BSAConfig, mask: jnp.ndarray | None = None,
+                  x: jnp.ndarray | None = None, return_aux: bool = False):
+    """Ball Sparse Attention (paper Eq. 9).
+
+    q: (B, N, Hq, D); k, v: (B, N, Hkv, D); mask: (B, N) bool (True = real).
+    ``x`` is the pre-projection layer input, needed only for token gating.
+    Returns (B, N, Hq, D) [+ aux dict].
+    """
+    B, N, Hq, D = q.shape
+    assert k.shape[:2] == (B, N) and v.shape == k.shape
+    assert Hq % k.shape[2] == 0, "q heads must be a multiple of kv heads"
+
+    out_ball = _ball_branch(q, k, v, mask, cfg)
+    out_cmp, k_cmp, v_cmp, blk_valid = _compression_branch(params, q, k, v, mask, cfg)
+    out_slc, top_idx = _selection_branch(params, q, k, v, k_cmp, blk_valid, mask, cfg)
+
+    gates = gate_values(params["gates"], cfg, x, Hq)
+    out = (gates["ball"] * out_ball.astype(jnp.float32)
+           + gates["cmp"] * out_cmp.astype(jnp.float32)
+           + gates["slc"] * out_slc.astype(jnp.float32))
+    if mask is not None:
+        out = jnp.where(mask[:, :, None, None], out, 0.0)
+    out = out.astype(q.dtype)
+    if return_aux:
+        return out, {"ball": out_ball, "cmp": out_cmp, "slc": out_slc,
+                     "indices": top_idx, "gates": gates}
+    return out

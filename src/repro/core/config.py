@@ -1,0 +1,50 @@
+"""Configuration for Ball Sparse Attention (paper Appendix A defaults)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BSAConfig:
+    """Hyperparameters of Ball Sparse Attention.
+
+    Defaults follow the paper (Appendix A, Table 4): ball 256, compression
+    block ℓ=8 with stride 8, selection block 8, top-k 4, group size 8.
+    """
+
+    ball_size: int = 256            # m — BTA ball size (power of two)
+    cmp_block: int = 8              # ℓ — compression block length (stride = ℓ)
+    slc_block: int = 8              # selection block length (paper uses = ℓ)
+    top_k: int = 4                  # k* — number of selected blocks
+    group_size: int = 8             # g — query group for shared selection (0 ⇒ off)
+    query_cmp_selection: bool = True   # Eq. 13–14: score with pooled queries
+    group_compression: bool = False    # Eq. 15: pooled-query compression branch
+    phi: str = "mean"               # φ pooling: "mean" | "mlp"
+    gate_mode: str = "scalar"       # σ(γ_b): "scalar" (per head) | "token" (input-dep.)
+    mask_own_ball: bool = True      # §3.2: selection ignores blocks in own ball
+    # --- causal-LM variant knobs (core/nsa_causal.py) ---
+    local_window: int = 0           # sliding-window length; 0 ⇒ ball_size
+    force_first_block: bool = True  # NSA: always select the initial block
+    # --- implementation ---
+    use_kernels: bool = False       # route hot paths through Pallas kernels
+    jnp_chunk_tokens: int = 0       # jnp fallback: query-tile size bounding
+                                    # temp memory (0 = off); kernels ignore it
+
+    def __post_init__(self):
+        if self.ball_size & (self.ball_size - 1):
+            raise ValueError("ball_size must be a power of two")
+        if self.slc_block != self.cmp_block:
+            raise ValueError("selection block must equal compression block "
+                             "(paper setting; keeps score→block mapping trivial)")
+        if self.ball_size % self.cmp_block:
+            raise ValueError("cmp_block must divide ball_size")
+        if self.group_size and self.ball_size % self.group_size:
+            raise ValueError("group_size must divide ball_size")
+        if self.group_size and self.query_cmp_selection and (
+                self.group_size % self.cmp_block and self.cmp_block % self.group_size):
+            raise ValueError("group_size and cmp_block must nest")
+
+    @property
+    def effective_local_window(self) -> int:
+        return self.local_window or self.ball_size

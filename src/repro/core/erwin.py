@@ -1,0 +1,61 @@
+"""Erwin-style baseline: Ball-Tree Attention with hierarchical coarsening.
+
+A faithful-in-spirit reproduction of the comparison system (Zhdanov et al.
+2025) used by the paper's Tables 1–3: local attention inside balls, with a
+U-Net-style coarsen → attend-at-scale → refine pattern so that global
+information propagates through pooled ball centroids rather than through
+sparse global branches (BSA's advantage is exactly that it avoids this
+progressive fidelity loss).
+
+We implement it as an attention *backend* with the same signature as BSA so
+the benchmark harness can swap mechanisms:  per layer, the attention is BTA
+at a layer-dependent coarsening level: features are mean-pooled by 2^level
+within the ball order, BTA runs on the pooled sequence, and outputs are
+un-pooled (nearest-neighbor upsample) back to full resolution.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bsa import ball_attention_ref
+from repro.core.branches import repeat_kv
+
+__all__ = ["erwin_attention"]
+
+
+def erwin_attention(q, k, v, *, ball_size: int, level: int = 0,
+                    mask=None, use_kernels: bool = False):
+    """BTA at coarsening ``level`` (0 = leaf balls, paper's BTA).
+
+    q: (B,N,Hq,D); k,v: (B,N,Hkv,D).  For level>0, q/k/v are mean-pooled by
+    s=2^level along the sequence, attended within balls of ``ball_size``
+    (so the receptive field covers s·ball_size leaf tokens), and the output
+    is repeated s× (Erwin's coarsen/refine with skip handled by caller)."""
+    B, N, Hq, D = q.shape
+    rep = Hq // k.shape[2]
+    kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
+    s = 1 << level
+    if s > 1:
+        assert N % (s * ball_size) == 0, "sequence must cover coarse balls"
+        def pool(t):
+            return t.reshape(B, N // s, s, Hq, D).mean(axis=2).astype(t.dtype)
+        qp, kp, vp = pool(q), pool(kf), pool(vf)
+        mp = None
+        if mask is not None:
+            mp = mask.reshape(B, N // s, s).any(-1)
+        if use_kernels:
+            from repro.kernels import ops as kops
+            outp = kops.ball_attention(qp, kp, vp, mp, ball_size)
+        else:
+            outp = ball_attention_ref(qp, kp, vp, mp, ball_size)
+        out = jnp.repeat(outp, s, axis=1)
+    else:
+        if use_kernels:
+            from repro.kernels import ops as kops
+            out = kops.ball_attention(q, kf, vf, mask, ball_size)
+        else:
+            out = ball_attention_ref(q, kf, vf, mask, ball_size)
+    if mask is not None:
+        out = jnp.where(mask[:, :, None, None], out, jnp.zeros((), out.dtype))
+    return out

@@ -1,0 +1,369 @@
+"""Causal BSA/NSA for 1-D token sequences (the LM-architecture backend).
+
+For 1-D sequences the ball tree degenerates to contiguous blocks, so BSA
+reduces to NSA with a *blocked local window* instead of the ball branch:
+
+  * ``ball`` → blocked local attention: each query block (size w) attends
+    causally within itself plus fully to the previous block (effective
+    receptive window w..2w).  This replaces NSA's per-token sliding window
+    with the hardware-aligned blocked equivalent (same trick Longformer /
+    block-local FlashAttention use on TPU).
+  * ``cmp``  → φ-compressed KV blocks; query t attends to every block that
+    ends strictly before t.
+  * ``slc``  → top-k *strictly past* blocks per query group (group-causal:
+    a block is selectable iff it ends before the group starts, so one
+    selection is causally valid for every query in the group).  The current
+    block is covered by the local branch (NSA instead force-selects it; we
+    document this deviation in DESIGN.md — the local branch already attends
+    to it exactly).  ``force_first_block`` keeps NSA's always-select-initial
+    -block behaviour.
+
+Both a full-sequence train path and an incremental decode path (KV cache +
+compressed-KV cache) are provided.  The decode path is O(w + S/ℓ + k*ℓ)
+per token — sub-quadratic end-to-end, which is what makes ``long_500k``
+serveable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.branches import (
+    NEG_INF,
+    block_validity,
+    chunked_q_attention,
+    gate_values,
+    gates_init,
+    mask_to_bias,
+    phi_apply,
+    phi_init,
+    repeat_kv,
+    sdpa,
+    selection_attend,
+)
+from repro.core.config import BSAConfig
+
+__all__ = [
+    "nsa_init",
+    "nsa_causal_attention",
+    "init_decode_cache",
+    "nsa_causal_decode",
+    "local_window_attention_ref",
+]
+
+
+def nsa_init(key, cfg: BSAConfig, *, n_heads: int, n_kv_heads: int, head_dim: int,
+             d_model: int, param_dtype=jnp.float32) -> dict:
+    kk, kv, kq, kg = jax.random.split(key, 4)
+    params = {
+        "phi_k": phi_init(kk, cfg, head_dim, param_dtype=param_dtype),
+        "phi_v": phi_init(kv, cfg, head_dim, param_dtype=param_dtype),
+        "gates": gates_init(kg, cfg, n_heads, d_model, param_dtype=param_dtype),
+    }
+    if cfg.query_cmp_selection:
+        params["phi_q"] = phi_init(kq, cfg, head_dim, param_dtype=param_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Local branch — blocked causal window
+# ---------------------------------------------------------------------------
+
+def local_window_attention_ref(q, k, v, window: int, chunk_blocks: int = 0):
+    """Blocked local causal attention (pure-jnp reference).
+
+    q,k,v: (B, N, H, D) with equal head counts.  Query block i attends to
+    block i (causal) and block i-1 (full).  ``chunk_blocks`` > 0 bounds temp
+    memory via lax.map tiles over blocks."""
+    B, N, H, D = q.shape
+    w = window
+    assert N % w == 0, f"N={N} not a multiple of local window {w}"
+    nb = N // w
+    qb = q.reshape(B, nb, w, H, D).transpose(0, 1, 3, 2, 4)        # (B,nb,H,w,D)
+    kb = k.reshape(B, nb, w, H, D).transpose(0, 1, 3, 2, 4)
+    vb = v.reshape(B, nb, w, H, D).transpose(0, 1, 3, 2, 4)
+    # previous block (block -1 is zeros, fully masked)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    kcat = jnp.concatenate([kprev, kb], axis=3)                     # (B,nb,H,2w,D)
+    vcat = jnp.concatenate([vprev, vb], axis=3)
+    qi = jnp.arange(w)[:, None]
+    ki = jnp.arange(2 * w)[None, :]
+    causal = ki <= qi + w                                           # allow prev + self-causal
+    first = jnp.concatenate([jnp.zeros((w, w), bool), jnp.tril(jnp.ones((w, w), bool))], axis=1)
+    bias = mask_to_bias(causal)                                     # (w, 2w)
+    bias_first = mask_to_bias(first)
+    biases = jnp.where((jnp.arange(nb) == 0)[:, None, None], bias_first[None], bias[None])
+    biases = biases[None, :, None]                                  # (1,nb,1,w,2w)
+
+    if chunk_blocks and nb % chunk_blocks == 0 and nb > chunk_blocks:
+        nc = nb // chunk_blocks
+        resh = lambda t: t.reshape(t.shape[0], nc, chunk_blocks, *t.shape[2:]) \
+                          .transpose(1, 0, *range(2, t.ndim + 1))
+        out = jax.lax.map(jax.checkpoint(lambda t: sdpa(t[0], t[1], t[2], t[3])),
+                          (resh(qb), resh(kcat), resh(vcat),
+                           resh(jnp.broadcast_to(biases, (B,) + biases.shape[1:]))))
+        out = out.transpose(1, 0, *range(2, out.ndim)).reshape(B, nb, H, w, D)
+    else:
+        out = sdpa(qb, kcat, vcat, biases)                          # (B,nb,H,w,D)
+    return out.transpose(0, 1, 3, 2, 4).reshape(B, N, H, D)
+
+
+def _local_branch(q, k, v, cfg: BSAConfig):
+    rep = q.shape[2] // k.shape[2]
+    kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        return kops.local_window_attention(q, kf, vf, cfg.effective_local_window)
+    w = cfg.effective_local_window
+    cb = max(cfg.jnp_chunk_tokens // w, 1) if cfg.jnp_chunk_tokens else 0
+    return local_window_attention_ref(q, kf, vf, w, chunk_blocks=cb)
+
+
+# ---------------------------------------------------------------------------
+# Train-time causal NSA
+# ---------------------------------------------------------------------------
+
+def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
+                         mask: jnp.ndarray | None = None,
+                         x: jnp.ndarray | None = None,
+                         return_aux: bool = False):
+    """Causal BSA.  q: (B,N,Hq,D); k,v: (B,N,Hkv,D)."""
+    B, N, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    ell = cfg.cmp_block
+    nb = N // ell
+
+    out_local = _local_branch(q, k, v, cfg)
+
+    # --- compression ---
+    k_cmp = phi_apply(params["phi_k"], k, mask, cfg)                # (B,NB,Hkv,D)
+    v_cmp = phi_apply(params["phi_v"], v, mask, cfg)
+    blk_valid = block_validity(mask, B, N, ell)
+    blk_end = jnp.arange(nb) * ell + (ell - 1)                      # last token of block
+    t = jnp.arange(N)
+    causal_blk = blk_end[None, :] < t[:, None]                      # (N, NB)
+    cmp_valid = blk_valid[:, None, None, :] & causal_blk[None, :, None, :]
+    kf, vf = repeat_kv(k_cmp, rep), repeat_kv(v_cmp, rep)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        # block-causal mask is generated in-kernel (never materialised)
+        out_cmp = kops.flash_attention(q, kf, vf, key_valid=blk_valid,
+                                       block_causal=True, ell=ell)
+    elif cfg.jnp_chunk_tokens:
+        out_cmp = chunked_q_attention(q, kf, vf, key_valid=blk_valid,
+                                      block_causal_ell=ell,
+                                      chunk=cfg.jnp_chunk_tokens)
+    else:
+        bias = mask_to_bias(cmp_valid)                              # (B,N,1,NB)
+        out_cmp = sdpa(q.transpose(0, 2, 1, 3), kf.transpose(0, 2, 1, 3),
+                       vf.transpose(0, 2, 1, 3),
+                       bias.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+
+    # --- selection ---
+    out_slc, top_idx = _causal_selection(params, q, k, v, k_cmp, blk_valid, mask, cfg)
+
+    gates = gate_values(params["gates"], cfg, x, Hq)
+    out = (gates["ball"] * out_local.astype(jnp.float32)
+           + gates["cmp"] * out_cmp.astype(jnp.float32)
+           + gates["slc"] * out_slc.astype(jnp.float32))
+    if mask is not None:
+        out = jnp.where(mask[:, :, None, None], out, 0.0)
+    out = out.astype(q.dtype)
+    if return_aux:
+        return out, {"local": out_local, "cmp": out_cmp, "slc": out_slc,
+                     "indices": top_idx, "gates": gates}
+    return out
+
+
+def _causal_selection(params, q, k, v, k_cmp, blk_valid, mask, cfg: BSAConfig):
+    B, N, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    ell = cfg.cmp_block
+    nb = N // ell
+    g = cfg.group_size if cfg.group_size else 1
+
+    # scores
+    if cfg.query_cmp_selection and cfg.group_size:
+        q_s = phi_apply(params["phi_q"], q, mask, cfg)              # (B,NB,Hq,D)
+        s = jnp.einsum("bmkrd,bnkd->bmkn",
+                       q_s.reshape(B, nb, Hkv, rep, D).astype(jnp.float32),
+                       k_cmp.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        rows_per_group = max(g // ell, 1)
+        G = nb // rows_per_group
+        s = s.reshape(B, G, rows_per_group, Hkv, nb).mean(axis=2)
+    else:
+        qg = q.reshape(B, N, Hkv, rep, D)
+        s = jnp.einsum("bmkrd,bnkd->bmkn", qg.astype(jnp.float32),
+                       k_cmp.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        if cfg.group_size:
+            G = N // g
+            s = s.reshape(B, G, g, Hkv, nb).mean(axis=2)
+        else:
+            G = N
+    s = s / (D ** 0.5)
+
+    tokens_per_group = N // s.shape[1]
+    G = s.shape[1]
+    grp_start = jnp.arange(G) * tokens_per_group
+    blk_end = jnp.arange(nb) * ell + (ell - 1)
+    causal = blk_end[None, :] < grp_start[:, None]                  # (G,NB): strictly past
+    s = jnp.where(causal[None, :, None, :], s, NEG_INF)
+    s = jnp.where(blk_valid[:, None, None, :], s, NEG_INF)
+    if cfg.force_first_block:
+        # NSA always selects the initial block (when causally valid)
+        boost = jnp.where(causal[:, :1], -NEG_INF, 0.0)             # (G,1)
+        s = s.at[..., 0].add(boost[None, :, None, 0])
+
+    k_star = min(cfg.top_k, nb)
+    top_vals, top_idx = jax.lax.top_k(s, k_star)                    # (B,G,Hkv,k*)
+    sel_valid = top_vals > NEG_INF / 2
+
+    # gather & attend (strictly-past blocks ⇒ no intra-block causal mask)
+    if cfg.use_kernels:
+        from repro.kernels import ops as kops
+        out = kops.selection_attention(q, k, v, top_idx, sel_valid, mask,
+                                       block_size=ell, group_size=N // G)
+    else:
+        out = selection_attend(q, k, v, top_idx, sel_valid, mask, cfg)
+    return out, top_idx
+
+
+# ---------------------------------------------------------------------------
+# Decode path (incremental, cached)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                      cfg: BSAConfig, dtype=jnp.bfloat16) -> dict:
+    w = cfg.effective_local_window
+    if max_len < 2 * w or max_len % w:
+        raise ValueError(f"max_len={max_len} must be a multiple of the local "
+                         f"window {w} and at least 2×")
+    nb = max_len // cfg.cmp_block
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype),
+        "k_cmp": jnp.zeros((batch, nb, n_kv_heads, head_dim), dtype),
+        "v_cmp": jnp.zeros((batch, nb, n_kv_heads, head_dim), dtype),
+        "length": jnp.zeros((), jnp.int32),   # tokens already in cache
+    }
+
+
+def nsa_causal_decode(params, q1, k1, v1, cache: dict, *, cfg: BSAConfig,
+                      x1: jnp.ndarray | None = None):
+    """One decode step.
+
+    q1: (B,1,Hq,D); k1,v1: (B,1,Hkv,D) for the NEW token at position
+    ``cache['length']``.  Returns (out (B,1,Hq,D), new_cache).
+    Cost per token: O(w) local + O(S/ℓ) compression + O(k*·ℓ) selection.
+    """
+    B, _, Hq, D = q1.shape
+    Hkv = k1.shape[2]
+    rep = Hq // Hkv
+    ell = cfg.cmp_block
+    w = cfg.effective_local_window
+    t = cache["length"]                                             # position of new token
+    S_max = cache["k"].shape[1]
+    nb_max = S_max // ell
+
+    # --- cache update (token level) ---
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype),
+                                           (0, t, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype),
+                                           (0, t, 0, 0))
+
+    # --- compressed cache update: when the new token completes a block ---
+    blk_id = t // ell
+    blk_start = blk_id * ell
+    complete = (t + 1) % ell == 0
+    last_block_k = jax.lax.dynamic_slice(
+        k_cache, (0, blk_start, 0, 0), (B, ell, Hkv, D))
+    last_block_v = jax.lax.dynamic_slice(
+        v_cache, (0, blk_start, 0, 0), (B, ell, Hkv, D))
+    new_kc = phi_apply(params["phi_k"], last_block_k, None, cfg)    # (B,1,Hkv,D)
+    new_vc = phi_apply(params["phi_v"], last_block_v, None, cfg)
+    k_cmp = jnp.where(
+        complete,
+        jax.lax.dynamic_update_slice(cache["k_cmp"], new_kc.astype(cache["k_cmp"].dtype),
+                                     (0, blk_id, 0, 0)),
+        cache["k_cmp"])
+    v_cmp = jnp.where(
+        complete,
+        jax.lax.dynamic_update_slice(cache["v_cmp"], new_vc.astype(cache["v_cmp"].dtype),
+                                     (0, blk_id, 0, 0)),
+        cache["v_cmp"])
+
+    # --- local branch: mirror the train-time BLOCKED window exactly ---
+    # token t lives in block b = t//w and attends to block b (causal) plus
+    # block b-1 (full) ⇒ the attendable range is [max(b-1,0)·w, t].
+    blk_lw = t // w
+    start = jnp.maximum(blk_lw - 1, 0) * w
+    k_win = jax.lax.dynamic_slice(k_cache, (0, start, 0, 0), (B, 2 * w, Hkv, D))
+    v_win = jax.lax.dynamic_slice(v_cache, (0, start, 0, 0), (B, 2 * w, Hkv, D))
+    pos = start + jnp.arange(2 * w)
+    win_valid = pos <= t                                            # (2w,)
+    qh = q1.transpose(0, 2, 1, 3)                                   # (B,Hq,1,D)
+    out_local = sdpa(qh, repeat_kv(k_win, rep).transpose(0, 2, 1, 3),
+                     repeat_kv(v_win, rep).transpose(0, 2, 1, 3),
+                     mask_to_bias(win_valid[None, None, None, :]))
+
+    # --- compression branch: all complete blocks strictly before t ---
+    n_complete = (t + 1) // ell                                     # after this token
+    blk_ok = jnp.arange(nb_max) < jnp.where(complete, n_complete - 1,
+                                            n_complete)             # strictly past
+    # blocks that end exactly at t are excluded (strictly before t);
+    # `complete` means block blk_id ends AT t → not yet attendable by t itself.
+    out_cmp = sdpa(qh, repeat_kv(k_cmp, rep).transpose(0, 2, 1, 3),
+                   repeat_kv(v_cmp, rep).transpose(0, 2, 1, 3),
+                   mask_to_bias(blk_ok[None, None, None, :]))
+
+    # --- selection branch ---
+    qg = q1.reshape(B, 1, Hkv, rep, D)
+    s = jnp.einsum("bmkrd,bnkd->bkn", qg.astype(jnp.float32),
+                   k_cmp.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) / (D ** 0.5)  # (B,Hkv,NB)
+    s = jnp.where(blk_ok[None, None, :], s, NEG_INF)
+    if cfg.force_first_block:
+        s = s.at[..., 0].add(jnp.where(blk_ok[0], -NEG_INF, 0.0))
+    k_star = min(cfg.top_k, nb_max)
+    top_vals, top_idx = jax.lax.top_k(s, k_star)                    # (B,Hkv,k*)
+    sel_valid = top_vals > NEG_INF / 2
+    # batched take_along_axis with (B, Hkv) as batch dims — keeps sharded
+    # head (or sequence) cache axes local under GSPMD (see branches.py)
+    L = k_star * ell
+    ig = jnp.where(sel_valid, top_idx, 0)
+    kbh = k_cache.reshape(B, nb_max, ell, Hkv, D).transpose(0, 3, 1, 2, 4)
+    vbh = v_cache.reshape(B, nb_max, ell, Hkv, D).transpose(0, 3, 1, 2, 4)
+    kg = jnp.take_along_axis(kbh.reshape(B, Hkv, nb_max, ell * D),
+                             ig[..., None], axis=2).reshape(B, Hkv, L, D)
+    vg = jnp.take_along_axis(vbh.reshape(B, Hkv, nb_max, ell * D),
+                             ig[..., None], axis=2).reshape(B, Hkv, L, D)
+    key_valid = jnp.broadcast_to(sel_valid[..., None],
+                                 (B, Hkv, k_star, ell)).reshape(B, Hkv, 1, L)
+    qh2 = q1.reshape(B, 1, Hkv, rep, D).transpose(0, 2, 3, 1, 4).reshape(B, Hkv, rep, D)
+    logits = jnp.einsum("bkrd,bkld->bkrl", qh2, kg,
+                        preferred_element_type=jnp.float32) / (D ** 0.5)
+    logits = logits + mask_to_bias(key_valid[:, :, 0][:, :, None, :])
+    mx = jnp.maximum(logits.max(-1, keepdims=True), NEG_INF / 2)
+    p = jnp.exp(logits - mx)
+    p = jnp.where(logits <= NEG_INF / 2, 0.0, p)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+    out_slc = jnp.einsum("bkrl,bkld->bkrd", p.astype(vg.dtype), vg,
+                         preferred_element_type=jnp.float32)
+    out_slc = out_slc.reshape(B, Hq, 1, D)
+
+    gates = gate_values(params["gates"], cfg, x1, Hq)               # (B,1,H,1) or (1,1,H,1)
+    gt = {b: jnp.moveaxis(gates[b], 2, 1) for b in gates}           # → (.,H,1,1)
+    out = (gt["ball"] * out_local.astype(jnp.float32)
+           + gt["cmp"] * out_cmp.astype(jnp.float32)
+           + gt["slc"] * out_slc.astype(jnp.float32))
+    out = out.transpose(0, 2, 1, 3).astype(q1.dtype)                # (B,1,Hq,D)
+
+    new_cache = {"k": k_cache, "v": v_cache, "k_cmp": k_cmp, "v_cmp": v_cmp,
+                 "length": t + 1}
+    return out, new_cache

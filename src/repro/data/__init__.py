@@ -1,0 +1,3 @@
+from repro.data.shapenet import ShapeNetCarDataset  # noqa: F401
+from repro.data.elasticity import ElasticityDataset  # noqa: F401
+from repro.data.lm import lm_batches  # noqa: F401

@@ -1,0 +1,60 @@
+"""Synthetic Elasticity benchmark proxy (Li et al. 2021): 972-point meshes of
+a plate with a random void, stress field regression.  Same sizes as the
+paper's Table 2 setting (seq len 972 → padded to 1024 = 4 balls of 256)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.balltree import build_balltree_permutation, pad_to_multiple
+
+N_POINTS = 972
+
+
+class ElasticityDataset:
+    def __init__(self, split="train", ball_size: int = 256, seed: int = 77):
+        self.length = 1000 if split == "train" else 200
+        self.offset = 0 if split == "train" else 1000
+        self.ball_size = ball_size
+        self.seed = seed
+
+    def __len__(self):
+        return self.length
+
+    def __getitem__(self, i: int) -> dict:
+        rng = np.random.default_rng(self.seed + self.offset + i)
+        # unit plate with an elliptic void; points on a jittered grid
+        n = N_POINTS
+        pts = rng.uniform(0, 1, (int(n * 1.6), 2)).astype(np.float32)
+        cx, cy = rng.uniform(0.3, 0.7, 2)
+        rx, ry = rng.uniform(0.08, 0.22, 2)
+        keep = (((pts[:, 0] - cx) / rx) ** 2 + ((pts[:, 1] - cy) / ry) ** 2) > 1.0
+        pts = pts[keep][:n]
+        while pts.shape[0] < n:  # top-up
+            extra = rng.uniform(0, 1, (n, 2)).astype(np.float32)
+            keep = (((extra[:, 0] - cx) / rx) ** 2 + ((extra[:, 1] - cy) / ry) ** 2) > 1.0
+            pts = np.concatenate([pts, extra[keep]])[:n]
+        # stress proxy: concentration around the void (Kirsch-like decay)
+        d = np.sqrt(((pts[:, 0] - cx) / rx) ** 2 + ((pts[:, 1] - cy) / ry) ** 2)
+        stress = (1.0 + 1.5 / np.maximum(d, 1.0) ** 2 *
+                  (1.0 + np.cos(2 * np.arctan2(pts[:, 1] - cy, pts[:, 0] - cx))))
+        stress = stress.astype(np.float32)[:, None]
+        p3 = np.concatenate([pts, np.zeros((n, 1), np.float32)], -1)
+        perm = build_balltree_permutation(p3, self.ball_size)
+        pts, stress = pts[perm], stress[perm]
+        feats = np.concatenate(
+            [pts, np.zeros((n, 1), np.float32),
+             np.broadcast_to([cx, cy, rx], (n, 3)).astype(np.float32)], -1)
+        feats, mask = pad_to_multiple(feats, self.ball_size)
+        stress, _ = pad_to_multiple(stress, self.ball_size)
+        return {"feats": feats, "target": stress, "mask": mask}
+
+    def batches(self, batch_size: int, *, shuffle=True, seed=0, epochs=None):
+        rng = np.random.default_rng(seed)
+        epoch = 0
+        while epochs is None or epoch < epochs:
+            order = rng.permutation(self.length) if shuffle else np.arange(self.length)
+            for s in range(0, self.length - batch_size + 1, batch_size):
+                items = [self[int(j)] for j in order[s:s + batch_size]]
+                yield {k: np.stack([it[k] for it in items]) for k in items[0]}
+            epoch += 1

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (  # noqa: F401
+    axis_rules,
+    constrain,
+    current_rules,
+    logical_to_spec,
+)

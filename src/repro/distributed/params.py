@@ -1,0 +1,173 @@
+"""Parameter / optimizer-state / batch / cache sharding inference.
+
+Pattern rules (Megatron-style TP over the ``model`` axis):
+
+  wq, wk, wv, gate, up (column-parallel)   → output dim over model
+  wo, down (row-parallel)                  → input dim over model
+  embed/tok_embed table                    → vocab dim over model
+  lm_head                                  → vocab (output) dim over model
+  MoE expert stacks w_gate/w_up/w_down     → EXPERT dim over model (EP)
+  mamba in_proj/out_proj                   → inner dim over model
+  everything else (norms, gates, biases)   → replicated
+
+Stacked layer dims (leading ``n_periods`` axis) are never sharded.  Any rule
+that does not divide evenly falls back to replication (the llava-56-heads
+case).  Optimizer m/v additionally shard their largest remaining dim over the
+DP axes — ZeRO-1 state partitioning.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (name, ndim-from-the-right dims to shard over `model`): index from the right
+_COL = {"wq", "wk", "wv", "gate", "up", "lm_head", "fc1", "frontend_proj",
+        "in_proj", "head"}
+_ROW = {"wo", "down", "out_proj", "fc2"}
+_VOCAB_TABLE = {"embed", "tok_embed"}
+_EXPERT = {"w_gate", "w_up", "w_down"}
+
+
+def _leaf_spec(path: tuple[str, ...], leaf) -> list[int]:
+    """Priority-ordered candidate dims (index from the LEFT) to shard over
+    ``model``; the first divisible one wins in ``_finalize``."""
+    names = [p for p in path]
+    if leaf.ndim == 0:
+        return []
+    field = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    if field == "w" or field == "b":
+        field = parent
+        parent = names[-3] if len(names) >= 3 else ""
+    nd = leaf.ndim
+    if field == "table" and parent in _VOCAB_TABLE:
+        return [nd - 2]                 # (vocab, d_model) → shard vocab
+    if field in _EXPERT:
+        # EP when E | TP; else TP inside each expert (e.g. qwen's 60 experts
+        # on a 16-way axis): column dim for w_gate/w_up, row dim for w_down
+        inner = nd - 1 if field in ("w_gate", "w_up") else nd - 2
+        return [nd - 3, inner]
+    if field in _COL and nd >= 2:
+        return [nd - 1]                 # output dim
+    if field in _ROW and nd >= 2:
+        return [nd - 2]                 # input dim
+    return []
+
+
+def _finalize(cands, shape, mesh: Mesh, *, zero1: bool = False,
+              all_axes: bool = False) -> P:
+    axes_model = mesh.shape.get("model", 1)
+    dp_names = ("pod", "data", "model") if all_axes else ("pod", "data")
+    dp_axes = tuple(a for a in dp_names if a in mesh.shape)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    out: list = [None] * len(shape)
+    for i in cands:
+        if axes_model > 1 and shape[i] % axes_model == 0:
+            out[i] = "model"
+            break
+    if zero1 and dp_axes and dp_size > 1:
+        # ZeRO-1: shard the largest still-unsharded dim over DP if divisible
+        cand = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in cand:
+            if out[i] is None and shape[i] % dp_size == 0 and shape[i] >= dp_size:
+                out[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+                break
+    return P(*out)
+
+
+def param_shardings(params_struct, mesh: Mesh, *, zero1: bool = False,
+                    tp: bool = True):
+    """Pytree of NamedSharding matching ``params_struct``.  ``tp=False``
+    disables model-axis tensor parallelism (DP-heavy layout for small
+    models); params then rely on zero1/FSDP over ALL mesh axes."""
+    def one(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        spec = _leaf_spec(names, leaf) if tp else []
+        return NamedSharding(mesh, _finalize(spec, leaf.shape, mesh,
+                                             zero1=zero1, all_axes=not tp))
+    return jax.tree_util.tree_map_with_path(one, params_struct)
+
+
+def opt_shardings(opt_struct, mesh: Mesh, *, tp: bool = True):
+    """m/v follow param rules + ZeRO-1 over DP; step replicated."""
+    def one(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        if names and names[0] == "step":
+            return NamedSharding(mesh, P())
+        names = names[1:] if names and names[0] in ("m", "v") else names
+        spec = _leaf_spec(names, leaf) if tp else []
+        return NamedSharding(mesh, _finalize(spec, leaf.shape, mesh, zero1=True,
+                                             all_axes=not tp))
+    return jax.tree_util.tree_map_with_path(one, opt_struct)
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def batch_shardings(batch_struct, mesh: Mesh, *, seq_parallel: bool = False,
+                    full_dp: bool = False):
+    """Batch dim over DP axes; in SP mode (global_batch < DP) shard the
+    SEQUENCE dim over `data` instead (BSA makes this collective-cheap).
+    ``full_dp`` spreads batch over the model axis too (DP-heavy layout)."""
+    names = ("pod", "data", "model") if full_dp else ("pod", "data")
+    dp = tuple(a for a in names if a in mesh.shape)
+
+    def one(leaf):
+        spec: list = [None] * leaf.ndim
+        if leaf.ndim >= 1:
+            dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+            if not seq_parallel and dp and leaf.shape[0] % dp_size == 0:
+                spec[0] = dp if len(dp) > 1 else dp[0]
+            elif seq_parallel and leaf.ndim >= 2 and "data" in mesh.shape \
+                    and leaf.shape[1] % mesh.shape["data"] == 0:
+                spec[1] = "data"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, batch_struct)
+
+
+def cache_shardings(cache_struct, mesh: Mesh, *, seq_parallel: bool = False):
+    """KV caches: batch over DP; kv-head dim over model when divisible; in SP
+    mode the cache SEQUENCE dim shards over `data`."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    model = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        spec: list = [None] * leaf.ndim
+        # layout conventions (leading stacked period dim is axis 0 when ndim>?):
+        # k/v:      (NP, B, S, Hkv, D)   k_cmp/v_cmp: (NP, B, NB, Hkv, D)
+        # mamba h:  (NP, B, H, Ns, P)    conv: (NP, B, W, C)   length: (NP,)
+        # encdec adds mem_k/mem_v: (NP, B, S, Hkv, D)
+        field = names[-1] if names else ""
+        if field == "length" or leaf.ndim <= 1:
+            return NamedSharding(mesh, P(*spec))
+        b_axis = 1 if leaf.ndim >= 3 else 0
+        if not seq_parallel and dp and leaf.shape[b_axis] % dp_size == 0:
+            spec[b_axis] = dp if len(dp) > 1 else dp[0]
+        if field in ("k", "v", "k_cmp", "v_cmp", "mem_k", "mem_v") and leaf.ndim >= 5:
+            if seq_parallel and "data" in mesh.shape \
+                    and leaf.shape[2] % mesh.shape["data"] == 0:
+                spec[2] = "data"
+            if leaf.shape[3] % model == 0 and model > 1:
+                spec[3] = "model"
+            elif spec[2] is None and model > 1 and leaf.shape[2] % model == 0:
+                # kv_heads ∤ model (e.g. 8 heads on a 16-way axis): shard the
+                # cache SEQUENCE over model instead — BSA decode touches the
+                # cache blockwise, so this stays collective-cheap
+                spec[2] = "model"
+        elif field == "h" and leaf.ndim >= 5 and leaf.shape[2] % model == 0:
+            spec[2] = "model"           # mamba state heads
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

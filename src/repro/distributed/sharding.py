@@ -1,0 +1,101 @@
+"""Logical-axis sharding (MaxText-style activation partitioning).
+
+Models annotate activations with LOGICAL axis names (``constrain(x, "batch",
+"seq", "d_model")``); a context maps logical names to mesh axes.  Outside any
+context (unit tests, single-device smoke runs) ``constrain`` is a no-op, so
+models never depend on a mesh being present.
+
+Divisibility guard: a logical axis is only mapped if the dimension is
+divisible by the mesh-axis size — e.g. llava-next's 56 heads on a 16-way
+``model`` axis fall back to replicated heads (the FFN still shards; see
+DESIGN §4 and the ``sequence`` attn_shard_mode).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# logical axis -> mesh axis name(s); None = replicate
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # residual stream BETWEEN layers: sharded over `model` (Megatron sequence
+    # parallelism) so the scan-carried activations the remat policy saves are
+    # 1/TP the size; GSPMD inserts the AG/RS pairs around TP matmuls.
+    "seq_res": ("model",),
+    "seq_sp": ("data",),          # sequence-parallel mode (long_500k, batch < data)
+    "seq_model": ("model",),      # ball-parallel attention (attn_shard_mode=sequence)
+    "d_model": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "d_ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "capacity": ("pod", "data"),  # MoE dispatch buffer token dim over DP
+    "ssm_inner": ("model",),
+    "ssm_state": None,
+    "blocks": None,
+    "stage": ("stage",),
+}
+
+
+def _get():
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: dict | None = None):
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    prev = _get()
+    _STATE.ctx = (mesh, merged)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_rules():
+    return _get()
+
+
+def logical_to_spec(logical_axes, shape, mesh, rules) -> P:
+    """Map logical axis names to a PartitionSpec, respecting divisibility."""
+    spec = []
+    used = set()
+    for dim, name in zip(shape, logical_axes):
+        entry = rules.get(name) if name else None
+        if entry is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in (entry if isinstance(entry, tuple) else (entry,))
+                     if a in mesh.shape and a not in used)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and size > 0 and dim % size == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def constrain(x, *logical_axes):
+    """Annotate activation sharding; no-op outside an ``axis_rules`` context."""
+    ctx = _get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{len(logical_axes)} axes for rank-{x.ndim} array")
+    spec = logical_to_spec(logical_axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

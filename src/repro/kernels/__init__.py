@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the BSA hot paths (ball / compression / selection
+attention) — the hardware-aligned implementation the paper leaves as future
+work.  ``ops`` holds the jit'd wrappers, ``ref`` the pure-jnp oracles."""

@@ -1,0 +1,68 @@
+"""Ball-Tree Attention Pallas kernel (block-diagonal fused attention).
+
+The ball IS the tile: with ball size m ≤ 512 and head_dim ≤ 128, one ball's
+Q/K/V (m×D) fits in VMEM whole, so the kernel is a single-pass fused
+softmax-attention per (batch·head, ball) grid cell — no streaming, no
+running-max bookkeeping.  MXU-aligned: the two matmuls are (m,D)×(D,m) and
+(m,m)×(m,D) with m a multiple of 8 (sublane) and D ∈ {64, 128} (lane).
+
+VMEM budget per grid step (m=256, D=128, bf16 in / fp32 logits):
+  q,k,v: 3·256·128·2 B = 192 KiB;  logits+p: 2·256·256·4 B = 512 KiB;
+  out: 128 KiB  →  < 1 MiB of the ~16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import NEG_INF, should_interpret
+
+__all__ = ["ball_attention_kernel_call"]
+
+
+def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale: float):
+    q = q_ref[0].astype(jnp.float32)                      # (m, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = s + bias_ref[0]                                   # (m, m) + (1, m) key bias
+    mx = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), NEG_INF / 2)
+    p = jnp.exp(s - mx)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    p = (p / denom).astype(v.dtype)
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ball_size", "n_heads", "interpret"))
+def ball_attention_kernel_call(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                               key_bias: jnp.ndarray, *, ball_size: int,
+                               n_heads: int, interpret: bool | None = None):
+    """q,k,v: (BH, N, D) flattened over batch×heads; key_bias: (B, N) fp32
+    additive (0 / NEG_INF).  Returns (BH, N, D)."""
+    BH, N, D = q.shape
+    m = ball_size
+    assert N % m == 0
+    nballs = N // m
+    H = n_heads
+    if interpret is None:
+        interpret = should_interpret()
+
+    grid = (BH, nballs)
+    blk = pl.BlockSpec((1, m, D), lambda b, i: (b, i, 0))
+    bias_blk = pl.BlockSpec((1, m), lambda b, i: (b // H, i))
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (D ** 0.5)),
+        grid=grid,
+        in_specs=[blk, blk, blk, bias_blk],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v, key_bias)

@@ -1,0 +1,21 @@
+"""Shared Pallas kernel utilities.
+
+TPU is the TARGET; on this CPU container kernels run under interpret mode
+(``interpret=True`` executes the kernel body in Python for correctness).
+``should_interpret()`` auto-detects; set REPRO_PALLAS_INTERPRET=0/1 to force.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+NEG_INF = -1e30
+
+
+def should_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,126 @@
+"""Flash-attention Pallas kernel with the mask modes BSA needs.
+
+Streaming softmax over K/V tiles (running max / sum / accumulator in VMEM
+scratch).  Used for:
+
+  * the COMPRESSION branch — queries vs φ-pooled coarse KV.  ``block_causal``
+    (with ``ell`` = compression block length) masks coarse block j for query
+    t unless the block ends strictly before t: (j+1)·ell − 1 < t.  The mask
+    is generated in-kernel from indices, never materialised (an N × N/ℓ fp32
+    bias for 32k tokens would be 0.5 GB — this is why the bias is virtual).
+  * FULL attention baseline — ``causal`` token mask.
+  * both support an additive per-key bias row (B, L) fp32 for padding.
+
+Grid: (BH, nQ, nK) with K innermost.  Scratch: m, l: (Tq, 1) fp32,
+acc: (Tq, D) fp32.  VMEM @ Tq=Tk=256, D=128 ≈ 0.6 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import NEG_INF, should_interpret
+
+__all__ = ["flash_attention_kernel_call"]
+
+
+def _pick_tile(n: int, pref: int) -> int:
+    """Largest divisor of n that is ≤ pref (tile sizes must divide the axis)."""
+    t = min(pref, n)
+    while n % t:
+        t -= 1
+    return t
+
+
+def _kernel(q_ref, k_ref, v_ref, kbias_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, n_k: int, tq: int, tk: int,
+            causal: bool, block_causal: bool, ell: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                       # (Tq, D)
+    k = k_ref[0].astype(jnp.float32)                       # (Tk, D)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = s + kbias_ref[0]                                   # (Tk,) key-validity bias
+
+    if causal or block_causal:
+        qpos = i * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        kidx = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        if block_causal:
+            ok = (kidx + 1) * ell - 1 < qpos               # coarse block ends before t
+        else:
+            ok = kidx <= qpos
+        s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]                                    # (Tq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.maximum(m_new, NEG_INF / 2)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    alpha = jnp.exp(jnp.minimum(m_prev - m_safe, 0.0))
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(j == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_heads", "tq", "tk", "causal", "block_causal", "ell", "interpret"))
+def flash_attention_kernel_call(q, k, v, key_bias, *, n_heads: int,
+                                tq: int = 256, tk: int = 256,
+                                causal: bool = False, block_causal: bool = False,
+                                ell: int = 1, interpret: bool | None = None):
+    """q: (BH, N, D); k,v: (BH, L, D); key_bias: (B, L) fp32 additive."""
+    BH, N, D = q.shape
+    L = k.shape[1]
+    tq = _pick_tile(N, tq)
+    tk = _pick_tile(L, tk)
+    H = n_heads
+    if interpret is None:
+        interpret = should_interpret()
+    n_k = L // tk
+
+    grid = (BH, N // tq, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (D ** 0.5), n_k=n_k, tq=tq,
+                          tk=tk, causal=causal, block_causal=block_causal,
+                          ell=ell),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tk), lambda b, i, j: (b // H, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, key_bias)

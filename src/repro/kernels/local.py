@@ -1,0 +1,61 @@
+"""Blocked local causal attention Pallas kernel (the LM 'ball' branch).
+
+Query block i attends causally within block i and fully to block i−1 —
+the TPU-aligned blocked equivalent of a sliding window.  The previous block
+is fetched by passing K (and V) twice with two index maps (self / prev),
+so one grid step holds a (w, D) query tile and a (2w, D) key tile in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import NEG_INF, should_interpret
+
+__all__ = ["local_window_kernel_call"]
+
+
+def _kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, o_ref, *, scale: float, w: int):
+    i = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                       # (w, D)
+    k = jnp.concatenate([kp_ref[0], ks_ref[0]], axis=0).astype(jnp.float32)  # (2w, D)
+    v = jnp.concatenate([vp_ref[0], vs_ref[0]], axis=0)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qi = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 1)
+    ok = ki <= qi + w                                      # prev full + self causal
+    ok = ok & ((i > 0) | (ki >= w))                        # block 0 has no prev
+    s = jnp.where(ok, s, NEG_INF)
+    mx = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), NEG_INF / 2)
+    p = jnp.exp(s - mx)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    o = jax.lax.dot_general((p / denom).astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def local_window_kernel_call(q, k, v, *, window: int, interpret: bool | None = None):
+    """q,k,v: (BH, N, D).  Returns (BH, N, D)."""
+    BH, N, D = q.shape
+    w = window
+    assert N % w == 0
+    if interpret is None:
+        interpret = should_interpret()
+    grid = (BH, N // w)
+    self_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, i, 0))
+    prev_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (D ** 0.5), w=w),
+        grid=grid,
+        in_specs=[self_blk, self_blk, self_blk, prev_blk, prev_blk],
+        out_specs=self_blk,
+        out_shape=jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v, k, v)

@@ -1,0 +1,102 @@
+"""jit'd wrappers: layout transforms between core tensor convention
+(B, N, H, D) and the kernels' flattened (B·H, N, D) / blocked layouts.
+
+These are the entry points ``repro.core`` uses when ``cfg.use_kernels``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.bta import ball_attention_kernel_call
+from repro.kernels.common import NEG_INF
+from repro.kernels.flash import flash_attention_kernel_call
+from repro.kernels.local import local_window_kernel_call
+from repro.kernels.selection import selection_attention_kernel_call
+
+__all__ = ["ball_attention", "flash_attention", "local_window_attention",
+           "selection_attention"]
+
+
+def _to_bh(t):
+    """(B, N, H, D) → (B·H, N, D)"""
+    B, N, H, D = t.shape
+    return t.transpose(0, 2, 1, 3).reshape(B * H, N, D)
+
+
+def _from_bh(t, B, H):
+    BH, N, D = t.shape
+    return t.reshape(B, H, N, D).transpose(0, 2, 1, 3)
+
+
+def _key_bias(mask, B, L):
+    if mask is None:
+        return jnp.zeros((B, L), jnp.float32)
+    return jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def ball_attention(q, k, v, mask, ball_size: int):
+    """q,k,v: (B,N,H,D) equal head counts; mask: (B,N) bool or None."""
+    B, N, H, D = q.shape
+    out = ball_attention_kernel_call(
+        _to_bh(q), _to_bh(k), _to_bh(v), _key_bias(mask, B, N),
+        ball_size=ball_size, n_heads=H)
+    return _from_bh(out, B, H)
+
+
+def flash_attention(q, k, v, *, key_valid=None, causal=False,
+                    block_causal=False, ell=1, bias=None,
+                    tq: int = 256, tk: int = 256):
+    """q: (B,N,H,D); k,v: (B,L,H,D) equal head counts.
+
+    key_valid: (B, L) bool.  ``causal``: token-level; ``block_causal``:
+    coarse-block causality with block length ``ell`` (compression branch).
+    ``bias`` (B,1,1,L) fp32 is accepted as an alternative key bias."""
+    B, N, H, D = q.shape
+    L = k.shape[1]
+    kb = _key_bias(key_valid, B, L)
+    if bias is not None:
+        kb = kb + bias.reshape(B, L).astype(jnp.float32)
+    out = flash_attention_kernel_call(
+        _to_bh(q), _to_bh(k), _to_bh(v), kb, n_heads=H,
+        causal=causal, block_causal=block_causal, ell=ell, tq=tq, tk=tk)
+    return _from_bh(out, B, H)
+
+
+def local_window_attention(q, k, v, window: int):
+    """q,k,v: (B,N,H,D) equal head counts."""
+    B, N, H, D = q.shape
+    out = local_window_kernel_call(_to_bh(q), _to_bh(k), _to_bh(v), window=window)
+    return _from_bh(out, B, H)
+
+
+def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
+                        block_size: int, group_size: int):
+    """Group-selected sparse attention via the scalar-prefetch kernel.
+
+    q: (B,N,Hq,D); k,v: (B,N,Hkv,D); top_idx/sel_valid: (B,G,Hkv,k*);
+    mask: (B,N) bool or None.  Returns (B,N,Hq,D)."""
+    B, N, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    ell = block_size
+    nb = N // ell
+    G = top_idx.shape[1]
+    g = N // G
+
+    qg = (q.reshape(B, G, g, Hkv, rep, D)
+           .transpose(0, 3, 1, 2, 4, 5)
+           .reshape(B, Hkv, G, g * rep, D))
+    kb = k.reshape(B, nb, ell, Hkv, D).transpose(0, 3, 1, 2, 4)   # (B,Hkv,NB,ℓ,D)
+    vb = v.reshape(B, nb, ell, Hkv, D).transpose(0, 3, 1, 2, 4)
+    idx = jnp.where(sel_valid, top_idx, -1).astype(jnp.int32)
+    idx = idx.transpose(0, 2, 1, 3)                               # (B,Hkv,G,k*)
+    if mask is None:
+        tok_bias = jnp.zeros((B, nb, ell), jnp.float32)
+    else:
+        tok_bias = jnp.where(mask.reshape(B, nb, ell), 0.0, NEG_INF).astype(jnp.float32)
+
+    out = selection_attention_kernel_call(qg, kb, vb, idx, tok_bias)
+    return (out.reshape(B, Hkv, G, g, rep, D)
+               .transpose(0, 2, 3, 1, 4, 5)
+               .reshape(B, N, Hq, D))

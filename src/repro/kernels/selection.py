@@ -1,0 +1,129 @@
+"""Group-selected sparse attention Pallas kernel (the NSA/BSA hot path).
+
+This is the TPU-native realization of the kernel the paper leaves as future
+work ("we do not implement a Triton kernel for efficient selection").  The
+per-group top-k block indices are **scalar-prefetched** to SMEM
+(``pltpu.PrefetchScalarGridSpec``) and drive the K/V BlockSpec index maps, so
+each grid step DMAs exactly one selected ℓ-sized KV block HBM→VMEM — a
+contiguous burst, the TPU analogue of the paper's "KV blocks fetched in
+contiguous chunks" cache-utilisation argument (§2.2 Group selection).
+
+Grid: (B, Hkv, G, k*) with the selected-block index j innermost; flash-style
+running-softmax scratch carries the accumulation across the k* blocks of a
+group.  The M (rows) dimension of every matmul is the whole query group
+(g positions × rep GQA heads), which is what keeps the MXU fed despite tiny
+ℓ=8 blocks — exactly the hardware-alignment rationale of NSA group fetch.
+
+Invalid selections are encoded as index −1: the index map clamps them to 0
+(a harmless fetch) and the kernel skips their accumulation via ``pl.when``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import NEG_INF, should_interpret
+
+__all__ = ["selection_attention_kernel_call"]
+
+
+def _kernel(idx_ref,                     # scalar prefetch (B, Hkv, G, k*) int32
+            q_ref, k_ref, v_ref, tokbias_ref,
+            o_ref, m_scr, l_scr, acc_scr, *, scale: float, k_star: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    g = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = idx_ref[b, h, g, j] >= 0
+
+    @pl.when(valid)
+    def _accumulate():
+        q = q_ref[0, 0, 0].astype(jnp.float32)             # (M, D)
+        k = k_ref[0, 0, 0].astype(jnp.float32)             # (ℓ, D)
+        v = v_ref[0, 0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = s + tokbias_ref[0]                             # (ℓ,) padding bias
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.maximum(m_new, NEG_INF / 2)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        alpha = jnp.exp(jnp.minimum(m_prev - m_safe, 0.0))
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+        m_scr[...] = m_new
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == k_star - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-20)
+        out = acc_scr[...] / denom
+        out = jnp.where(l_scr[...] > 0.0, out, 0.0)        # all-invalid group → 0
+        o_ref[0, 0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def selection_attention_kernel_call(q, kb, vb, idx, tok_bias, *,
+                                    interpret: bool | None = None):
+    """Compute group-selected attention.
+
+    q:        (B, Hkv, G, M, D)   query groups (M = g·rep rows)
+    kb, vb:   (B, Hkv, NB, ℓ, D)  blocked keys/values
+    idx:      (B, Hkv, G, k*) int32 selected block ids, −1 ⇒ invalid
+    tok_bias: (B, NB, ℓ) fp32 additive key-padding bias (0 / NEG_INF)
+    returns   (B, Hkv, G, M, D)
+    """
+    B, Hkv, G, M, D = q.shape
+    NB, ell = kb.shape[2], kb.shape[3]
+    k_star = idx.shape[-1]
+    if interpret is None:
+        interpret = should_interpret()
+
+    grid = (B, Hkv, G, k_star)
+
+    def q_map(b, h, g, j, idx_ref):
+        return (b, h, g, 0, 0)
+
+    def kv_map(b, h, g, j, idx_ref):
+        return (b, h, jnp.maximum(idx_ref[b, h, g, j], 0), 0, 0)
+
+    def tok_map(b, h, g, j, idx_ref):
+        return (b, jnp.maximum(idx_ref[b, h, g, j], 0), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, M, D), q_map),
+            pl.BlockSpec((1, 1, 1, ell, D), kv_map),
+            pl.BlockSpec((1, 1, 1, ell, D), kv_map),
+            pl.BlockSpec((1, 1, ell), tok_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, M, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((M, 1), jnp.float32),
+            pltpu.VMEM((M, 1), jnp.float32),
+            pltpu.VMEM((M, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (D ** 0.5), k_star=k_star),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, M, D), q.dtype),
+        interpret=interpret,
+    )(idx, q, kb, vb, tok_bias)

@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+propagates, the collective schedule exists, and memory_analysis shows the
+per-device footprint fits HBM.  Emits one JSON per cell under results/dryrun/
+(resumable: cells with an existing JSON are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-20b --shape train_4k --mesh single
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.distributed.params import (
+    batch_shardings,
+    cache_shardings,
+    opt_shardings,
+    param_shardings,
+    replicated,
+)
+from repro.distributed.sharding import axis_rules
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models.api import model_api
+from repro.optim import adamw_init
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e
+
+
+def _dp_size(mesh):
+    return int(np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.shape]))
+
+
+def shape_rules(mcfg, shape, mesh):
+    """Logical-axis rule overrides for a given cell."""
+    rules = {}
+    seq_parallel = shape.global_batch < _dp_size(mesh)
+    if seq_parallel:
+        rules["seq"] = ("data",)
+    if mcfg.attn_shard_mode == "sequence":
+        # ball-parallel attention (e.g. llava: 56 heads ∤ 16) — shard seq over
+        # model for activations; params keep their TP layout.
+        rules["seq"] = ("model",) if not seq_parallel else ("data", "model")
+    return rules, seq_parallel
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    mcfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    api = model_api(mcfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules, seq_parallel = shape_rules(mcfg, shape, mesh)
+
+    B, N = shape.global_batch, shape.seq_len
+    params_struct = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_sh = param_shardings(params_struct, mesh, zero1=mcfg.fsdp)
+
+    with mesh, axis_rules(mesh, rules):
+        if shape.kind == "train":
+            opt_struct = jax.eval_shape(
+                lambda p: adamw_init(p, state_dtype=jnp.dtype(mcfg.opt_state_dtype)),
+                params_struct)
+            o_sh = opt_shardings(opt_struct, mesh)
+            bspec = api.batch_specs(B, N)
+            b_sh = batch_shardings(bspec, mesh, seq_parallel=seq_parallel)
+            step = make_train_step(api)
+            lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                              donate_argnums=(0, 1)).lower(
+                params_struct, opt_struct, bspec)
+        elif shape.kind == "prefill":
+            bspec = api.batch_specs(B, N)
+            b_sh = batch_shardings(bspec, mesh, seq_parallel=seq_parallel)
+            step = make_prefill_step(api)
+            lowered = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(
+                params_struct, bspec)
+        else:  # decode
+            cspec = api.cache_specs(B, N)
+            c_sh = cache_shardings(cspec, mesh, seq_parallel=seq_parallel)
+            tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+            t_sh = batch_shardings(tok, mesh, seq_parallel=False)
+            step = make_serve_step(api)
+            lowered = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
+                              donate_argnums=(1,)).lower(
+                params_struct, cspec, tok)
+    return lowered, mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False) -> dict:
+    mesh_name = "pod2" if multi_pod else "pod1"
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False}
+    t0 = time.time()
+    try:
+        lowered, mesh = lower_cell(arch, shape_name, multi_pod)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        hh = analyze_hlo(hlo)
+        # persist the HLO so the analysis can be re-run without recompiling
+        hlo_dir = out_dir / "hlo"
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        import gzip
+        with gzip.open(hlo_dir / f"{arch}__{shape_name}__{mesh_name}.hlo.gz",
+                       "wt") as f:
+            f.write(hlo)
+        coll = hh["collectives"]
+        n_dev = mesh.size
+
+        args_b = int(ma.argument_size_in_bytes)
+        temp_b = int(ma.temp_size_in_bytes)
+        out_b = int(ma.output_size_in_bytes)
+        alias_b = int(ma.alias_size_in_bytes)
+        peak = args_b + temp_b + out_b - alias_b
+        # XLA-CPU emulates bf16 dots via f32 COPIES of bf16 operands — temp
+        # buffers that do not exist on TPU (native bf16 MXU).  The TPU
+        # estimate subtracts them; both numbers are recorded.
+        upcast = min(int(hh["bf16_upcast_bytes"]), temp_b)
+        peak_tpu = max(peak - upcast, args_b + out_b)
+        rec.update({
+            "ok": True,
+            "n_devices": n_dev,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            # memory_analysis is PER DEVICE
+            "argument_bytes": args_b,
+            "output_bytes": out_b,
+            "temp_bytes": temp_b,
+            "alias_bytes": alias_b,
+            "peak_bytes": peak,
+            "bf16_upcast_bytes": upcast,
+            "peak_bytes_tpu_est": peak_tpu,
+            "fits_hbm": bool(peak_tpu <= HBM_PER_CHIP),
+            # cost_analysis is PER DEVICE but counts while bodies ONCE —
+            # kept for reference; the loop-WEIGHTED numbers below are the
+            # roofline inputs (see launch/hlo_analysis.py)
+            "flops_per_device_unweighted": float(ca.get("flops", -1)),
+            "bytes_per_device_unweighted": float(ca.get("bytes accessed", -1)),
+            "flops_per_device": hh["dot_flops_weighted"],
+            "traffic_bytes_per_device": hh["traffic_bytes_weighted"],
+            "collectives": coll,
+            "collective_wire_bytes": hh["collective_wire_bytes"],
+        })
+        # human-readable print per spec
+        print(f"[{arch} × {shape_name} × {mesh_name}] compile {rec['compile_s']}s  "
+              f"peak/dev {peak/2**30:.2f} GiB (tpu-est {peak_tpu/2**30:.2f})  "
+              f"fits={rec['fits_hbm']}  flops/dev {rec['flops_per_device']:.3e}  "
+              f"coll {rec['collective_wire_bytes']/2**20:.1f} MiB", flush=True)
+    except Exception as e:  # noqa: BLE001 — record and continue the matrix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{arch} × {shape_name} × {mesh_name}] FAILED: {rec['error']}",
+              flush=True)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, out_dir, force=args.force)
+                n_ok += bool(rec.get("ok"))
+                n_fail += not rec.get("ok")
+                jax.clear_caches()  # bound host RAM across the 80-cell matrix
+    print(f"\ndry-run matrix: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+"""HLO text analysis for the roofline: loop-weighted FLOPs, HBM traffic and
+collective bytes.
+
+Why this exists: ``compiled.cost_analysis()`` counts each while-loop BODY
+exactly once, but our layer stacks compile to while loops (scan) that run
+n_periods times — flops/bytes/collectives must be weighted by trip counts or
+a 52-layer model looks like a 1-layer model.  Trip counts come from the
+``backend_config={"known_trip_count":{"n":...}}`` annotation XLA attaches to
+while ops (fallback: the s32 limit constant in the loop condition).
+
+All numbers are PER DEVICE (we parse the post-SPMD partitioned module).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# op name = first lowercase word followed by "(" — layout tiles like
+# ":T(8,128)(2,1)" and tuple comments "/*index=5*/" never match (uppercase /
+# preceded by ":" / no paren), so this survives arbitrary tuple types.
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\(")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[str]] = {}
+        self.instr_type: dict[str, str] = {}
+        cur, lines = None, []
+        for line in text.splitlines():
+            s = line.strip()
+            if s.endswith("{") and ("->" in s) and not s.startswith("//"):
+                m = _HEADER_RE.match(s)
+                if m:
+                    cur, lines = m.group(1), []
+                    continue
+            if s.startswith("}"):
+                if cur is not None:
+                    self.computations[cur] = lines
+                cur = None
+                continue
+            if cur is not None:
+                lines.append(s)
+                im = _INSTR_RE.match(s)
+                if im:
+                    self.instr_type[im.group(1)] = im.group(2)
+
+        self.mult = self._multipliers()
+
+    def _multipliers(self) -> dict[str, int]:
+        edges: list[tuple[str, str, int]] = []
+        for cname, lines in self.computations.items():
+            for s in lines:
+                im = _INSTR_RE.match(s)
+                if not im:
+                    continue
+                op = im.group(3)
+                if op == "while":
+                    trips = 1
+                    tm = _TRIP_RE.search(s)
+                    if tm:
+                        trips = int(tm.group(1))
+                    else:
+                        cm = _COND_RE.search(s)
+                        if cm:
+                            cond = "\n".join(self.computations.get(cm.group(1), []))
+                            consts = [int(c) for c in
+                                      re.findall(r"s32\[\]\s+constant\((\d+)\)", cond)]
+                            trips = max(consts) if consts else 1
+                    bm = _BODY_RE.search(s)
+                    if bm:
+                        edges.append((cname, bm.group(1), trips))
+                    cm = _COND_RE.search(s)
+                    if cm:
+                        edges.append((cname, cm.group(1), trips))
+                else:
+                    for callee in _CALLS_RE.findall(s):
+                        edges.append((cname, callee, 1))
+        mult: dict[str, int] = defaultdict(lambda: 0)
+        # roots: computations never called
+        called = {c for _, c, _ in edges}
+        for cname in self.computations:
+            if cname not in called:
+                mult[cname] = 1
+        for _ in range(8):  # fixpoint over shallow nesting
+            changed = False
+            for parent, child, trips in edges:
+                cand = mult[parent] * max(trips, 1)
+                if cand > mult[child]:
+                    mult[child] = cand
+                    changed = True
+            if not changed:
+                break
+        return dict(mult)
+
+    # -- analyses ----------------------------------------------------------
+
+    def collectives(self) -> dict:
+        out = {c: {"bytes": 0, "count": 0} for c in COLLECTIVES}
+        for cname, lines in self.computations.items():
+            m = self.mult.get(cname, 1)
+            for s in lines:
+                im = _INSTR_RE.match(s)
+                if not im:
+                    continue
+                op = im.group(3)
+                base = op[:-6] if op.endswith("-start") else op
+                if base in COLLECTIVES and not op.endswith("-done"):
+                    out[base]["bytes"] += _type_bytes(im.group(2)) * m
+                    out[base]["count"] += m
+        return out
+
+    def dot_flops(self) -> float:
+        """2 × result_elems × contraction_size per dot, loop-weighted."""
+        total = 0.0
+        for cname, lines in self.computations.items():
+            m = self.mult.get(cname, 1)
+            for s in lines:
+                im = _INSTR_RE.match(s)
+                if not im or im.group(3) not in ("dot", "convolution"):
+                    continue
+                res_dims = _shape_dims(im.group(2))
+                res_elems = 1
+                for d in res_dims:
+                    res_elems *= d
+                if im.group(3) == "dot":
+                    lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", s)
+                    # lhs operand type lookup
+                    ops = _OPERAND_RE.findall(s.split("dot(", 1)[1])
+                    k = 1
+                    if lc and ops:
+                        lhs_t = self.instr_type.get(ops[0], "")
+                        ldims = _shape_dims(lhs_t)
+                        for ci in lc.group(1).split(","):
+                            if ci and int(ci) < len(ldims):
+                                k *= ldims[int(ci)]
+                    total += 2.0 * res_elems * k * m
+                else:  # convolution: ≈ 2 × out × kernel_spatial × in_per_group
+                    km = re.search(r"window=\{size=([\dx]+)", s)
+                    ksz = 1
+                    if km:
+                        for d in km.group(1).split("x"):
+                            ksz *= int(d)
+                    total += 2.0 * res_elems * ksz * m
+        return total
+
+    def traffic_bytes(self) -> float:
+        """Approximate HBM traffic: Σ (result + operand bytes) over top-level
+        (non-fused-subcomputation) instructions, loop-weighted.  Fusion
+        callees are skipped — the fusion op itself carries the traffic."""
+        fused = set()
+        for cname, lines in self.computations.items():
+            for s in lines:
+                for callee in _CALLS_RE.findall(s):
+                    if "fusion(" in s or "kind=kLoop" in s or "kind=kInput" in s \
+                            or "kind=kOutput" in s:
+                        fused.add(callee)
+        skip_ops = {"parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "after-all", "partition-id", "replica-id"}
+        total = 0.0
+        for cname, lines in self.computations.items():
+            if cname in fused:
+                continue
+            m = self.mult.get(cname, 1)
+            for s in lines:
+                im = _INSTR_RE.match(s)
+                if not im or im.group(3) in skip_ops:
+                    continue
+                b = _type_bytes(im.group(2))
+                args = s.split("(", 1)[1] if "(" in s else ""
+                args = args.split("), ")[0]
+                for opn in _OPERAND_RE.findall(args):
+                    b += _type_bytes(self.instr_type.get(opn, ""))
+                total += b * m
+        return total
+
+
+    def bf16_upcast_bytes(self, min_bytes: int = 16 * 2**20) -> int:
+        """XLA-CPU emulates bf16 dots by materialising f32 COPIES of bf16
+        operands (weights, KV caches) — temp buffers that do NOT exist on
+        TPU, where bf16 matmul is native.  Sum of large f32 results whose
+        single operand is an identically-shaped bf16 tensor; used to correct
+        the per-device peak-memory estimate (documented in EXPERIMENTS)."""
+        total = 0
+        seen = set()
+        for cname, lines in self.computations.items():
+            for s in lines:
+                im = _INSTR_RE.match(s)
+                if not im or im.group(3) not in ("convert", "fusion", "copy"):
+                    continue
+                res_t = im.group(2)
+                if not res_t.startswith("f32["):
+                    continue
+                b = _type_bytes(res_t)
+                if b < min_bytes:
+                    continue
+                args = s.split("(", 1)[1]
+                ops = _OPERAND_RE.findall(args.split(")")[0])
+                if len(ops) != 1:
+                    continue
+                src_t = self.instr_type.get(ops[0], "")
+                if src_t.startswith("bf16[") and \
+                        _shape_dims(src_t) == _shape_dims(res_t):
+                    if im.group(1) not in seen:
+                        seen.add(im.group(1))
+                        total += b
+        return total
+
+
+def analyze_hlo(text: str) -> dict:
+    mod = HloModule(text)
+    coll = mod.collectives()
+    return {
+        "collectives": coll,
+        "collective_wire_bytes": collective_wire_bytes(coll),
+        "dot_flops_weighted": mod.dot_flops(),
+        "traffic_bytes_weighted": mod.traffic_bytes(),
+        "bf16_upcast_bytes": mod.bf16_upcast_bytes(),
+    }
+
+
+def analyze_collectives(hlo_text: str) -> dict:
+    return HloModule(hlo_text).collectives()
+
+
+def collective_wire_bytes(coll: dict) -> float:
+    """Per-device wire bytes with ring factors: AR≈2×, others ≈1×."""
+    total = 0.0
+    for op, d in coll.items():
+        factor = 2.0 if op == "all-reduce" else 1.0
+        total += factor * d["bytes"]
+    return total
+
+
+if __name__ == "__main__":
+    import sys
+    print(json.dumps(analyze_hlo(open(sys.argv[1]).read()), indent=1))

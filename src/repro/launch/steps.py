@@ -1,0 +1,54 @@
+"""Step functions: train_step (fwd+bwd+AdamW), prefill_step, serve_step.
+
+These are THE functions the dry-run lowers and the trainer/server jit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw_update, clip_by_global_norm, cosine_schedule
+
+
+def make_train_step(api, *, base_lr=1e-3, weight_decay=0.01, total_steps=100_000,
+                    warmup_steps=1000, max_grad_norm=1.0):
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(api.loss, has_aux=True)(
+            params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = cosine_schedule(opt_state["step"], base_lr=base_lr,
+                             total_steps=total_steps, warmup_steps=warmup_steps)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr,
+                                         weight_decay=weight_decay)
+        out = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        out.update({k: v for k, v in metrics.items() if v.ndim == 0})
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(api):
+    """Forward pass returning LAST-position logits (B, V) — lowering the full
+    (B, N, V) logits tensor would dominate memory for 200k vocabs."""
+
+    def prefill_step(params, batch):
+        out = api.forward(params, batch)
+        return out[:, -1].astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(api, *, greedy: bool = True):
+    """(params, caches, token (B,)) → (next_token (B,), logits (B,V), caches)."""
+
+    def serve_step(params, caches, token):
+        logits, caches = api.decode_step(params, token, caches)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, caches
+
+    return serve_step

@@ -1,0 +1,13 @@
+from repro.layers.nn import (  # noqa: F401
+    dense_init,
+    dense,
+    rmsnorm_init,
+    rmsnorm,
+    swiglu_init,
+    swiglu,
+    embed_init,
+    embed,
+    mlp_init,
+    mlp,
+)
+from repro.layers.rope import rope_freqs, apply_rope  # noqa: F401

@@ -1,0 +1,97 @@
+"""Minimal functional NN layer library (pure JAX pytrees, no framework).
+
+Every layer is a pair of functions:
+  ``<layer>_init(key, ...) -> params``   (params: nested dict of jnp arrays)
+  ``<layer>(params, x, ...) -> y``
+
+Parameters are created in ``param_dtype`` and compute runs in the dtype of
+the inputs (matmuls accumulate in fp32 via ``preferred_element_type``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+def _he_scale(fan_in: int) -> float:
+    return (2.0 / max(fan_in, 1)) ** 0.5
+
+
+def dense_init(key, d_in: int, d_out: int, *, param_dtype=jnp.float32,
+               scale: float | None = None, bias: bool = False) -> Params:
+    if scale is None:
+        scale = _he_scale(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(param_dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), param_dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = jnp.einsum("...i,io->...o", x, p["w"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rmsnorm_init(d: int, *, param_dtype=jnp.float32) -> Params:
+    return {"g": jnp.ones((d,), param_dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype) * p["g"].astype(x.dtype)
+
+
+def swiglu_init(key, d_model: int, d_ff: int, *, param_dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, param_dtype=param_dtype),
+        "up": dense_init(k2, d_model, d_ff, param_dtype=param_dtype),
+        "down": dense_init(k3, d_ff, d_model, param_dtype=param_dtype,
+                           scale=_he_scale(d_ff)),
+    }
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = dense(p["gate"], x)
+    u = dense(p["up"], x)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return dense(p["down"], h)
+
+
+def mlp_init(key, d_in: int, d_hidden: int, d_out: int, *, param_dtype=jnp.float32) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": dense_init(k1, d_in, d_hidden, param_dtype=param_dtype, bias=True),
+        "fc2": dense_init(k2, d_hidden, d_out, param_dtype=param_dtype,
+                          scale=_he_scale(d_hidden), bias=True),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(dense(p["fc1"], x).astype(jnp.float32)).astype(x.dtype)
+    return dense(p["fc2"], h)
+
+
+def embed_init(key, vocab: int, d_model: int, *, param_dtype=jnp.float32) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                      * (1.0 / d_model ** 0.5)).astype(param_dtype)}
+
+
+def embed(p: Params, ids: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    t = p["table"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied (or untied) logits projection: x (..., d) @ table.T -> (..., vocab)."""
+    return jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype),
+                      preferred_element_type=jnp.float32)

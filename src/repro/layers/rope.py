@@ -1,0 +1,24 @@
+"""Rotary position embeddings (RoPE)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), fp32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Apply RoPE.  x: (..., seq, heads, head_dim); positions: broadcastable to
+    (..., seq) int32.  Rotation computed in fp32, returned in x.dtype."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., seq, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,25 @@
+from repro.models.transformer import (  # noqa: F401
+    layer_spec,
+    lm_apply,
+    lm_cache_init,
+    lm_decode_step,
+    lm_init,
+    lm_loss,
+    n_periods,
+)
+from repro.models.pointcloud import pc_apply, pc_init, pc_loss  # noqa: F401
+from repro.models.encdec import (  # noqa: F401
+    encdec_cache_init,
+    encdec_decode_step,
+    encdec_init,
+    encdec_loss,
+    encode,
+)
+from repro.models.vlm import vlm_apply, vlm_init, vlm_loss  # noqa: F401
+from repro.models.moe import moe_apply, moe_init  # noqa: F401
+from repro.models.mamba2 import (  # noqa: F401
+    mamba2_apply,
+    mamba2_cache_init,
+    mamba2_decode,
+    mamba2_init,
+)

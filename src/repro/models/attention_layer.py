@@ -1,0 +1,141 @@
+"""Attention layer: QKV/O projections + RoPE + attention-backend dispatch.
+
+One layer serves all model families; the backend (``bsa`` | ``full`` |
+``erwin``) and causality are chosen by the caller.  Decode steps share the
+same projections and route through ``core.nsa_causal_decode`` (sparse) or a
+dense cached path (full attention).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    bsa_attention,
+    bsa_init,
+    erwin_attention,
+    full_attention,
+    init_decode_cache,
+    nsa_causal_attention,
+    nsa_causal_decode,
+    nsa_init,
+)
+from repro.core.branches import repeat_kv, sdpa, mask_to_bias
+from repro.layers.nn import dense, dense_init
+from repro.layers.rope import apply_rope
+
+
+def attention_layer_init(key, mcfg, *, param_dtype) -> dict:
+    d = mcfg.d_model
+    hd = mcfg.resolved_head_dim
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(kq, d, mcfg.n_heads * hd, param_dtype=param_dtype),
+        "wk": dense_init(kk, d, mcfg.n_kv_heads * hd, param_dtype=param_dtype),
+        "wv": dense_init(kv, d, mcfg.n_kv_heads * hd, param_dtype=param_dtype),
+        "wo": dense_init(ko, mcfg.n_heads * hd, d, param_dtype=param_dtype),
+    }
+    if mcfg.attention == "bsa":
+        init_fn = bsa_init  # same param structure as nsa_init
+        p["bsa"] = init_fn(kb, mcfg.bsa, n_heads=mcfg.n_heads,
+                           n_kv_heads=mcfg.n_kv_heads, head_dim=hd,
+                           d_model=d, param_dtype=param_dtype)
+    return p
+
+
+def _project(p, x, mcfg, positions=None, rope: bool = True):
+    B, N, _ = x.shape
+    hd = mcfg.resolved_head_dim
+    q = dense(p["wq"], x).reshape(B, N, mcfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, N, mcfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(B, N, mcfg.n_kv_heads, hd)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, mcfg.rope_theta)
+        k = apply_rope(k, positions, mcfg.rope_theta)
+    return q, k, v
+
+
+def attention_layer_apply(p, x, *, mcfg, causal: bool, mask=None,
+                          positions=None, rope: bool = True,
+                          erwin_level: int = 0):
+    """Full-sequence forward.  x: (B, N, d_model) → (B, N, d_model)."""
+    B, N, _ = x.shape
+    q, k, v = _project(p, x, mcfg, positions, rope)
+    if mcfg.attention == "bsa":
+        if causal:
+            out = nsa_causal_attention(p["bsa"], q, k, v, cfg=mcfg.bsa,
+                                       mask=mask, x=x)
+        else:
+            out = bsa_attention(p["bsa"], q, k, v, cfg=mcfg.bsa, mask=mask, x=x)
+    elif mcfg.attention == "erwin":
+        out = erwin_attention(q, k, v, ball_size=mcfg.bsa.ball_size,
+                              level=erwin_level, mask=mask,
+                              use_kernels=mcfg.bsa.use_kernels)
+    else:
+        out = full_attention(q, k, v, mask=mask, causal=causal,
+                             use_kernels=mcfg.bsa.use_kernels)
+    out = out.reshape(B, N, mcfg.n_heads * mcfg.resolved_head_dim)
+    return dense(p["wo"], out)
+
+
+def cross_attention_apply(p, x, memory_kv, *, mcfg, mem_mask=None):
+    """Cross-attention with precomputed memory K/V: (B, L, Hkv, D) pair."""
+    B, N, _ = x.shape
+    hd = mcfg.resolved_head_dim
+    q = dense(p["wq"], x).reshape(B, N, mcfg.n_heads, hd)
+    mk, mv = memory_kv
+    out = full_attention(q, mk, mv, mask=mem_mask, causal=False,
+                         use_kernels=mcfg.bsa.use_kernels)
+    return dense(p["wo"], out.reshape(B, N, mcfg.n_heads * hd))
+
+
+def memory_kv(p, memory, *, mcfg):
+    """Precompute cross-attention K/V from encoder output (B, L, d)."""
+    B, L, _ = memory.shape
+    hd = mcfg.resolved_head_dim
+    mk = dense(p["wk"], memory).reshape(B, L, mcfg.n_kv_heads, hd)
+    mv = dense(p["wv"], memory).reshape(B, L, mcfg.n_kv_heads, hd)
+    return mk, mv
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def attention_cache_init(mcfg, batch: int, max_len: int, dtype) -> dict:
+    hd = mcfg.resolved_head_dim
+    if mcfg.attention == "bsa":
+        return init_decode_cache(batch, max_len, mcfg.n_kv_heads, hd,
+                                 mcfg.bsa, dtype=dtype)
+    return {
+        "k": jnp.zeros((batch, max_len, mcfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, max_len, mcfg.n_kv_heads, hd), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def attention_layer_decode(p, x1, cache, *, mcfg, rope: bool = True):
+    """One-token decode.  x1: (B, 1, d) → (B, 1, d), updated cache."""
+    B = x1.shape[0]
+    t = cache["length"]
+    pos = jnp.full((B, 1), t, jnp.int32)
+    q, k, v = _project(p, x1, mcfg, pos if rope else None, rope)
+    if mcfg.attention == "bsa":
+        out, cache = nsa_causal_decode(p["bsa"], q, k, v, cache,
+                                       cfg=mcfg.bsa, x1=x1)
+    else:
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, t, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, t, 0, 0))
+        S = kc.shape[1]
+        valid = jnp.arange(S)[None, None, None, :] <= t
+        rep = mcfg.n_heads // mcfg.n_kv_heads
+        out = sdpa(q.transpose(0, 2, 1, 3),
+                   repeat_kv(kc.astype(q.dtype), rep).transpose(0, 2, 1, 3),
+                   repeat_kv(vc.astype(q.dtype), rep).transpose(0, 2, 1, 3),
+                   mask_to_bias(valid)).transpose(0, 2, 1, 3)
+        cache = {"k": kc, "v": vc, "length": t + 1}
+    out = out.reshape(B, 1, mcfg.n_heads * mcfg.resolved_head_dim)
+    return dense(p["wo"], out), cache

@@ -1,0 +1,172 @@
+"""Mamba-2 (SSD — state-space duality) mixer layer.
+
+Chunked SSD algorithm (Dao & Gu 2024): within-chunk quadratic (attention-
+like) term + inter-chunk linear state recurrence, both expressed with
+einsums and one ``lax.scan`` over chunks.  A single-step recurrent decode
+path shares the parameters (train ≡ decode is unit-tested).
+
+The paper's BSA technique is attention-specific; this arch runs WITHOUT it
+(DESIGN §Arch-applicability) — SSD is itself sub-quadratic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.layers.nn import dense, dense_init, rmsnorm, rmsnorm_init
+
+CHUNK = 128
+
+
+def _dims(mcfg):
+    d_inner = mcfg.ssm_expand * mcfg.d_model
+    H = d_inner // mcfg.ssm_head_dim
+    return d_inner, H, mcfg.ssm_head_dim, mcfg.ssm_state
+
+
+def mamba2_init(key, mcfg, *, param_dtype) -> dict:
+    d = mcfg.d_model
+    d_inner, H, P, Ns = _dims(mcfg)
+    conv_ch = d_inner + 2 * Ns
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_proj = 2 * d_inner + 2 * Ns + H          # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(k1, d, d_proj, param_dtype=param_dtype),
+        "conv_w": (jax.random.normal(k2, (mcfg.ssm_conv, conv_ch), jnp.float32)
+                   * 0.1).astype(param_dtype),
+        "conv_b": jnp.zeros((conv_ch,), param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(param_dtype),
+        "D": jnp.ones((H,), param_dtype),
+        "dt_bias": jnp.zeros((H,), param_dtype),
+        "norm": rmsnorm_init(d_inner, param_dtype=param_dtype),
+        "out_proj": dense_init(k3, d_inner, d, param_dtype=param_dtype),
+    }
+
+
+def _split_proj(proj, mcfg):
+    d_inner, H, P, Ns = _dims(mcfg)
+    z, xin, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + Ns, 2 * d_inner + 2 * Ns], axis=-1)
+    return z, xin, Bm, Cm, dt
+
+
+def _conv_train(p, u):
+    """Causal depthwise conv (width ssm_conv).  u: (B, S, C)."""
+    w = p["conv_w"].astype(u.dtype)                                # (W, C)
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :], (1,), "VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=u.shape[-1])
+    return out + p["conv_b"].astype(u.dtype)
+
+
+def mamba2_apply(p, x, mcfg):
+    """x: (B, S, d_model) → (B, S, d_model).  Chunked SSD scan."""
+    B, S, _ = x.shape
+    d_inner, H, P, Ns = _dims(mcfg)
+    Q = min(CHUNK, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    proj = dense(p["in_proj"], x)
+    z, xin, Bm, Cm, dt = _split_proj(proj, mcfg)
+    xBC = jax.nn.silu(_conv_train(p, jnp.concatenate([xin, Bm, Cm], -1))
+                      .astype(jnp.float32)).astype(x.dtype)
+    xin, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + Ns], axis=-1)
+    xin = constrain(xin.reshape(B, S, H, P), "batch", "seq", "heads", "head_dim")
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                   # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    loga = dt * A[None, None, :]                                   # (B,S,H) = log decay
+    dtx = xin.astype(jnp.float32) * dt[..., None]                  # (B,S,H,P)
+
+    # chunk
+    loga_c = loga.reshape(B, nc, Q, H)
+    cs = jnp.cumsum(loga_c, axis=2)                                # inclusive
+    dtx_c = dtx.reshape(B, nc, Q, H, P)
+    B_c = Bm.reshape(B, nc, Q, Ns).astype(jnp.float32)
+    C_c = Cm.reshape(B, nc, Q, Ns).astype(jnp.float32)
+
+    # intra-chunk: y[i] = Σ_{j≤i} (C_i·B_j) exp(cs_i − cs_j) dtx_j
+    CB = jnp.einsum("bcin,bcjn->bcij", C_c, B_c,
+                    preferred_element_type=jnp.float32)            # (B,nc,Q,Q)
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]              # (B,nc,Q,Q,H)
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # mask in LOG space: exp of unmasked j>i entries overflows (grads → NaN)
+    M = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", CB, M, dtx_c,
+                         preferred_element_type=jnp.float32)
+
+    # chunk out-states: S_c = Σ_j exp(cs_last − cs_j) B_j ⊗ dtx_j  (B,nc,H,Ns,P)
+    decay_out = jnp.exp(cs[:, :, -1:, :] - cs)                     # (B,nc,Q,H)
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", B_c, decay_out, dtx_c,
+                     preferred_element_type=jnp.float32)
+    A_tot = jnp.exp(cs[:, :, -1, :])                               # (B,nc,H)
+
+    # inter-chunk recurrence (scan over chunks)
+    def step(h, inp):
+        a_tot, s_c = inp                                           # (B,H), (B,H,Ns,P)
+        h_new = a_tot[..., None, None] * h + s_c
+        return h_new, h                                            # emit ENTERING state
+    h0 = jnp.zeros((B, H, Ns, P), jnp.float32)
+    _, h_in = jax.lax.scan(step, h0,
+                           (A_tot.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                           # (B,nc,H,Ns,P)
+
+    # inter-chunk output: y_inter[i] = C_i · h_in · exp(cs_i)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", C_c, jnp.exp(cs), h_in,
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                mcfg.norm_eps)
+    return dense(p["out_proj"], y)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def mamba2_cache_init(mcfg, batch: int, dtype=jnp.float32) -> dict:
+    d_inner, H, P, Ns = _dims(mcfg)
+    conv_ch = d_inner + 2 * Ns
+    return {
+        "h": jnp.zeros((batch, H, Ns, P), jnp.float32),
+        "conv": jnp.zeros((batch, mcfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode(p, x1, cache, mcfg):
+    """x1: (B, 1, d_model) → (B, 1, d_model), updated cache."""
+    B = x1.shape[0]
+    d_inner, H, P, Ns = _dims(mcfg)
+    proj = dense(p["in_proj"], x1)
+    z, xin, Bm, Cm, dt = _split_proj(proj, mcfg)
+    u = jnp.concatenate([xin, Bm, Cm], -1)                         # (B,1,C)
+    win = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)  # (B,W,C)
+    w = p["conv_w"].astype(u.dtype)
+    xBC = jnp.einsum("bwc,wc->bc", win, w) + p["conv_b"].astype(u.dtype)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x1.dtype)
+    xin, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + Ns], axis=-1)
+    xin = xin.reshape(B, H, P)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(dt1 * A[None, :])                                  # (B,H)
+    dtx = xin.astype(jnp.float32) * dt1[..., None]                 # (B,H,P)
+    b_out = jnp.einsum("bn,bhp->bhnp", Bm.astype(jnp.float32), dtx)
+    h = a[..., None, None] * cache["h"] + b_out
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(B, 1, d_inner).astype(x1.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x1.dtype),
+                mcfg.norm_eps)
+    out = dense(p["out_proj"], y)
+    return out, {"h": h, "conv": win[:, 1:]}

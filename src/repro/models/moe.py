@@ -1,0 +1,107 @@
+"""Token-choice top-k Mixture-of-Experts FFN with capacity-bounded,
+sort-based dispatch (GSPMD/EP-friendly: no host sync, fixed shapes).
+
+Dispatch: flatten (token, choice) assignments, stable-sort by expert, rank
+within expert segments, scatter into an (E, C, d) buffer (overflow dropped —
+deterministic, position-in-sort order), run stacked SwiGLU experts with one
+einsum each, gather back weighted by router probs.  The (E, C, d) buffer is
+annotated with the ``experts`` logical axis so EP shards it across ``model``
+and XLA inserts the all-to-alls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.layers.nn import dense, dense_init, swiglu, swiglu_init
+
+
+def moe_init(key, mcfg, *, param_dtype) -> dict:
+    d, E, dff = mcfg.d_model, mcfg.n_experts, mcfg.moe_d_ff
+    Ep = max(mcfg.pad_experts_to, E)         # EP-alignment padding (inert)
+    kr, ke, ks = jax.random.split(key, 3)
+    scale = (2.0 / d) ** 0.5
+    kg, ku, kd = jax.random.split(ke, 3)
+    p = {
+        "router": dense_init(kr, d, E, param_dtype=param_dtype, scale=0.02),
+        "w_gate": (jax.random.normal(kg, (Ep, d, dff), jnp.float32) * scale).astype(param_dtype),
+        "w_up": (jax.random.normal(ku, (Ep, d, dff), jnp.float32) * scale).astype(param_dtype),
+        "w_down": (jax.random.normal(kd, (Ep, dff, d), jnp.float32)
+                   * (2.0 / dff) ** 0.5).astype(param_dtype),
+    }
+    if mcfg.n_shared_experts:
+        p["shared"] = swiglu_init(ks, d, mcfg.n_shared_experts * dff,
+                                  param_dtype=param_dtype)
+    return p
+
+
+def moe_apply(p, x, mcfg):
+    """x: (B, S, d) → (B, S, d).  Returns (out, aux) with load-balance loss.
+
+    Dispatch is PER BATCH ROW (vmapped): the batch dim is DP-sharded and the
+    expert dim model-sharded, so the sort/scatter is device-local and the
+    expert einsum contracts with no collective — token traffic to experts is
+    the only cross-device movement (GSPMD all-to-all), never a full-buffer
+    all-reduce."""
+    B, S, d = x.shape
+    E, k = mcfg.n_experts, mcfg.experts_per_token
+    Ep = max(mcfg.pad_experts_to, E)
+
+    logits = dense(p["router"], x).astype(jnp.float32)             # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                         # (B, S, k)
+    w = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)    # renormalise
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean((0, 1))                                        # (E,)
+    onehot_counts = jnp.zeros((E,), jnp.int32).at[top_e.reshape(-1)].add(1)
+    ce = onehot_counts.astype(jnp.float32) / (B * S * k)
+    aux_loss = E * jnp.sum(me * ce)
+
+    cap = int(mcfg.capacity_factor * S * k / E) or 1
+    cap = min(max(cap, 4), S * k)
+    rnd = 64 if cap >= 64 else 4
+    cap = -(-cap // rnd) * rnd
+
+    def row_dispatch(xr, er, wr):
+        """xr: (S, d); er/wr: (S, k) → (buf (Ep,cap,d), e_sort, t_sort, w_sort, slot)."""
+        e_flat = er.reshape(-1)
+        t_flat = jnp.repeat(jnp.arange(S), k)
+        w_flat = wr.reshape(-1)
+        order = jnp.argsort(e_flat, stable=True)
+        e_sort, t_sort, w_sort = e_flat[order], t_flat[order], w_flat[order]
+        counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(S * k) - starts[e_sort]
+        slot = jnp.where(rank < cap, rank, cap)                    # cap ⇒ drop
+        buf = jnp.zeros((Ep, cap, d), xr.dtype)
+        buf = buf.at[e_sort, slot].set(xr[t_sort], mode="drop")
+        return buf, e_sort, t_sort, w_sort, slot
+
+    buf, e_sort, t_sort, w_sort, slot = jax.vmap(row_dispatch)(x, top_e, w)
+    buf = constrain(buf, "batch", "experts", "capacity", "d_model")
+
+    # ---- experts: stacked SwiGLU (e over model, b over data — local) ----
+    h_g = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    h_u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    h = jax.nn.silu(h_g) * h_u
+    out_buf = jnp.einsum("becf,efd->becd", h.astype(x.dtype),
+                         p["w_down"].astype(x.dtype),
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    out_buf = constrain(out_buf, "batch", "experts", "capacity", "d_model")
+
+    def row_combine(ob, e_sort, t_sort, w_sort, slot):
+        y_sort = ob[e_sort, jnp.minimum(slot, cap - 1)]            # (S·k, d)
+        y_sort = jnp.where((slot < cap)[:, None], y_sort, 0.0)
+        return jnp.zeros((S, d), jnp.float32).at[t_sort].add(
+            y_sort.astype(jnp.float32) * w_sort[:, None])
+
+    y = jax.vmap(row_combine)(out_buf, e_sort, t_sort, w_sort, slot).astype(x.dtype)
+
+    if "shared" in p:
+        y = y + swiglu(p["shared"], x.reshape(B * S, d)).reshape(B, S, d)
+    return y, {"aux_loss": aux_loss, "expert_counts": onehot_counts}

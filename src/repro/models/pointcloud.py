@@ -1,0 +1,94 @@
+"""The paper's model: 18 × [RMSNorm → BSA → RMSNorm → SwiGLU] on ball-ordered
+point clouds, MSE regression head (airflow pressure / stress field).
+
+The attention backend is switchable (``bsa`` | ``full`` | ``erwin``) to
+reproduce Tables 1–3.  Inputs arrive ball-ordered (data pipeline applies the
+ball-tree permutation) with a validity mask for padding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.layers.nn import dense, dense_init, rmsnorm, rmsnorm_init, swiglu, swiglu_init
+from repro.models.attention_layer import attention_layer_apply, attention_layer_init
+
+
+def pc_init(key, mcfg) -> dict:
+    pd = mcfg.pdtype()
+    ke, kl, kh = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: _layer_init(k, mcfg, pd))(
+        jax.random.split(kl, mcfg.n_layers))
+    return {
+        "embed": dense_init(ke, mcfg.in_dim, mcfg.d_model, param_dtype=pd, bias=True),
+        "layers": layers,
+        "final_norm": rmsnorm_init(mcfg.d_model, param_dtype=pd),
+        "head": dense_init(kh, mcfg.d_model, mcfg.out_dim, param_dtype=pd,
+                           scale=0.02, bias=True),
+    }
+
+
+def _layer_init(key, mcfg, pd):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": rmsnorm_init(mcfg.d_model, param_dtype=pd),
+        "attn": attention_layer_init(k1, mcfg, param_dtype=pd),
+        "norm2": rmsnorm_init(mcfg.d_model, param_dtype=pd),
+        "ffn": swiglu_init(k2, mcfg.d_model, mcfg.d_ff, param_dtype=pd),
+    }
+
+
+def pc_apply(params, feats, *, mcfg, mask=None, erwin_level_of=None):
+    """feats: (B, N, in_dim) ball-ordered; mask: (B, N).  → (B, N, out_dim)."""
+    cdt = mcfg.cdtype()
+    x = dense(params["embed"], feats.astype(cdt))
+    x = constrain(x, "batch", "seq_res", "d_model")
+
+    def layer(lp, x, level):
+        h = rmsnorm(lp["norm1"], x, mcfg.norm_eps)
+        h = attention_layer_apply(lp["attn"], h, mcfg=mcfg, causal=False,
+                                  mask=mask, positions=None, rope=False,
+                                  erwin_level=level)
+        x = x + h
+        h = rmsnorm(lp["norm2"], x, mcfg.norm_eps)
+        x = x + swiglu(lp["ffn"], h)
+        return constrain(x, "batch", "seq_res", "d_model")
+
+    if mcfg.attention == "erwin" and erwin_level_of is None:
+        # Erwin's coarsen/refine cycle: levels 0,1,2,1,0,...
+        cyc = [0, 1, 2, 1]
+        erwin_level_of = lambda i: cyc[i % len(cyc)]
+
+    if erwin_level_of is not None:
+        # per-layer levels differ → unrolled loop (baseline only, 18 layers)
+        for i in range(mcfg.n_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            x = layer(lp, x, erwin_level_of(i))
+    else:
+        fn = functools.partial(layer, level=0)
+        if mcfg.remat:
+            fn = jax.checkpoint(fn)
+        def body(x, lp):
+            return fn(lp, x), None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+
+    x = rmsnorm(params["final_norm"], x, mcfg.norm_eps)
+    return dense(params["head"], x).astype(jnp.float32)
+
+
+def pc_loss(params, batch, *, mcfg):
+    """batch: {feats (B,N,F), target (B,N,out_dim), mask (B,N)} → MSE."""
+    pred = pc_apply(params, batch["feats"], mcfg=mcfg, mask=batch.get("mask"))
+    err = (pred - batch["target"].astype(jnp.float32)) ** 2
+    m = batch.get("mask")
+    if m is not None:
+        err = jnp.where(m[..., None], err, 0.0)
+        denom = jnp.maximum(m.sum() * mcfg.out_dim, 1)
+    else:
+        denom = err.size
+    loss = err.sum() / denom
+    return loss, {"mse": loss}

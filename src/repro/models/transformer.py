@@ -1,0 +1,256 @@
+"""Decoder-only LM backbone covering dense / MoE / SSM / hybrid families.
+
+Layers are organised in PERIODS: a period is the smallest repeating pattern
+of (mixer, ffn) pairs — e.g. jamba's 8-layer [7×mamba + 1×attn, MoE every
+2nd] pattern, phi-3.5-MoE's 1-layer [attn, moe], tinyllama's [attn, dense].
+Parameters are stacked over periods and the forward pass is a single
+``jax.lax.scan`` over the stack → compact HLO (essential for 512-way SPMD
+compiles) and a natural remat boundary.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.layers.losses import masked_mean_nll
+from repro.layers.nn import (
+    dense, dense_init, embed, embed_init, rmsnorm, rmsnorm_init, swiglu,
+    swiglu_init, unembed,
+)
+from repro.models.attention_layer import (
+    attention_cache_init,
+    attention_layer_apply,
+    attention_layer_decode,
+    attention_layer_init,
+)
+from repro.models.mamba2 import (
+    mamba2_apply,
+    mamba2_cache_init,
+    mamba2_decode,
+    mamba2_init,
+)
+from repro.models.moe import moe_apply, moe_init
+
+
+# ---------------------------------------------------------------------------
+# Layer pattern
+# ---------------------------------------------------------------------------
+
+def layer_spec(mcfg) -> list[tuple[str, str]]:
+    """[(mixer, ffn)] for ONE period."""
+    if mcfg.attn_period:                      # hybrid (jamba): 1 attn per period
+        P = mcfg.attn_period
+        mixers = ["mamba"] * P
+        mixers[P // 2] = "attn"
+    elif mcfg.family == "ssm":
+        P = max(mcfg.moe_period, 1)
+        mixers = ["mamba"] * P
+    else:
+        P = max(mcfg.moe_period, 1) if mcfg.moe else 1
+        mixers = ["attn"] * P
+    ffns = []
+    for i in range(P):
+        if mcfg.d_ff == 0 and not mcfg.moe:
+            ffns.append("none")
+        elif mcfg.moe and (i % max(mcfg.moe_period, 1) == max(mcfg.moe_period, 1) - 1):
+            ffns.append("moe")
+        else:
+            ffns.append("dense")
+    return list(zip(mixers, ffns))
+
+
+def n_periods(mcfg) -> int:
+    P = len(layer_spec(mcfg))
+    assert mcfg.n_layers % P == 0, (mcfg.n_layers, P)
+    return mcfg.n_layers // P
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_one_period(key, mcfg, param_dtype):
+    spec = layer_spec(mcfg)
+    p = {}
+    for i, (mixer, ffn) in enumerate(spec):
+        k1, k2, key = jax.random.split(key, 3)
+        lp = {"norm1": rmsnorm_init(mcfg.d_model, param_dtype=param_dtype)}
+        if mixer == "attn":
+            lp["attn"] = attention_layer_init(k1, mcfg, param_dtype=param_dtype)
+        else:
+            lp["mamba"] = mamba2_init(k1, mcfg, param_dtype=param_dtype)
+        if ffn != "none":
+            lp["norm2"] = rmsnorm_init(mcfg.d_model, param_dtype=param_dtype)
+            if ffn == "moe":
+                lp["moe"] = moe_init(k2, mcfg, param_dtype=param_dtype)
+            else:
+                lp["ffn"] = swiglu_init(k2, mcfg.d_model, mcfg.d_ff,
+                                        param_dtype=param_dtype)
+        p[f"pos{i}"] = lp
+    return p
+
+
+def lm_init(key, mcfg) -> dict:
+    pd = mcfg.pdtype()
+    ke, kl, kh = jax.random.split(key, 3)
+    NP = n_periods(mcfg)
+    layers = jax.vmap(lambda k: _init_one_period(k, mcfg, pd))(
+        jax.random.split(kl, NP))
+    params = {
+        "embed": embed_init(ke, mcfg.vocab_size, mcfg.d_model, param_dtype=pd),
+        "layers": layers,
+        "final_norm": rmsnorm_init(mcfg.d_model, param_dtype=pd),
+    }
+    if not mcfg.tie_embeddings:
+        params["lm_head"] = dense_init(kh, mcfg.d_model, mcfg.vocab_size,
+                                       param_dtype=pd, scale=0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _period_apply(pp, x, *, mcfg, mask, positions, causal=True):
+    spec = layer_spec(mcfg)
+    aux_loss = jnp.zeros((), jnp.float32)
+    for i, (mixer, ffn) in enumerate(spec):
+        lp = pp[f"pos{i}"]
+        h = rmsnorm(lp["norm1"], x, mcfg.norm_eps)
+        if mixer == "attn":
+            h = attention_layer_apply(lp["attn"], h, mcfg=mcfg, causal=causal,
+                                      mask=mask, positions=positions)
+        else:
+            h = mamba2_apply(lp["mamba"], h, mcfg)
+        x = x + h
+        x = constrain(x, "batch", "seq_res", "d_model")
+        if ffn != "none":
+            h = rmsnorm(lp["norm2"], x, mcfg.norm_eps)
+            if ffn == "moe":
+                h, aux = moe_apply(lp["moe"], h, mcfg)
+                aux_loss = aux_loss + aux["aux_loss"]
+            else:
+                h = swiglu(lp["ffn"], h)
+            x = x + h
+            x = constrain(x, "batch", "seq_res", "d_model")
+    return x, aux_loss
+
+
+def lm_apply(params, tokens=None, *, mcfg, inputs_embeds=None, mask=None,
+             positions=None, causal: bool = True, return_hidden: bool = False):
+    """tokens: (B, N) int32 (or inputs_embeds (B, N, d)).  Returns
+    (logits (B,N,V) fp32, aux_loss)."""
+    cdt = mcfg.cdtype()
+    if inputs_embeds is None:
+        x = embed(params["embed"], tokens, dtype=cdt)
+    else:
+        x = inputs_embeds.astype(cdt)
+    B, N, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None], (B, N))
+    x = constrain(x, "batch", "seq_res", "d_model")
+
+    period = functools.partial(_period_apply, mcfg=mcfg, mask=mask,
+                               positions=positions, causal=causal)
+    if mcfg.remat:
+        period = jax.checkpoint(period, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, pp):
+        x, aux = carry
+        x, aux_p = period(pp, x)
+        return (x, aux + aux_p), None
+
+    (x, aux_loss), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    params["layers"])
+    x = rmsnorm(params["final_norm"], x, mcfg.norm_eps)
+    if return_hidden:
+        return x, aux_loss
+    if mcfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["lm_head"], x)
+    logits = constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
+    return logits, aux_loss
+
+
+def lm_loss(params, batch, *, mcfg):
+    """batch: {tokens (B,N), labels (B,N), [loss_mask (B,N)]}."""
+    logits, aux_loss = lm_apply(params, batch["tokens"], mcfg=mcfg,
+                                inputs_embeds=batch.get("inputs_embeds"))
+    loss = masked_mean_nll(logits, batch["labels"], batch.get("loss_mask"))
+    return loss + 0.01 * aux_loss, {"loss": loss, "aux_loss": aux_loss}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _period_cache_init(mcfg, batch, max_len, dtype):
+    spec = layer_spec(mcfg)
+    c = {}
+    for i, (mixer, _) in enumerate(spec):
+        if mixer == "attn":
+            c[f"pos{i}"] = attention_cache_init(mcfg, batch, max_len, dtype)
+        else:
+            c[f"pos{i}"] = mamba2_cache_init(mcfg, batch, dtype)
+    return c
+
+
+def lm_cache_init(mcfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    NP = n_periods(mcfg)
+    one = _period_cache_init(mcfg, batch, max_len, dtype)
+    return jax.tree.map(lambda t: jnp.zeros((NP,) + t.shape, t.dtype), one)
+
+
+def _period_decode(pp, pc, x1, *, mcfg):
+    spec = layer_spec(mcfg)
+    new_c = {}
+    for i, (mixer, ffn) in enumerate(spec):
+        lp = pp[f"pos{i}"]
+        h = rmsnorm(lp["norm1"], x1, mcfg.norm_eps)
+        if mixer == "attn":
+            h, new_c[f"pos{i}"] = attention_layer_decode(lp["attn"], h, pc[f"pos{i}"],
+                                                         mcfg=mcfg)
+        else:
+            h, new_c[f"pos{i}"] = mamba2_decode(lp["mamba"], h, pc[f"pos{i}"], mcfg)
+        x1 = x1 + h
+        if ffn != "none":
+            h = rmsnorm(lp["norm2"], x1, mcfg.norm_eps)
+            if ffn == "moe":
+                h, _ = moe_apply(lp["moe"], h, mcfg)
+            else:
+                h = swiglu(lp["ffn"], h)
+            x1 = x1 + h
+    return x1, new_c
+
+
+def lm_decode_step(params, token, caches, *, mcfg):
+    """token: (B,) int32 → (logits (B, V), new_caches)."""
+    cdt = mcfg.cdtype()
+    x1 = embed(params["embed"], token[:, None], dtype=cdt)       # (B,1,d)
+
+    def body(x1, inp):
+        pp, pc = inp
+        x1, new_pc = _period_decode(pp, pc, x1, mcfg=mcfg)
+        return x1, new_pc
+
+    x1, new_caches = jax.lax.scan(body, x1, (params["layers"], caches))
+    x1 = rmsnorm(params["final_norm"], x1, mcfg.norm_eps)
+    if mcfg.tie_embeddings:
+        logits = unembed(params["embed"], x1)
+    else:
+        logits = dense(params["lm_head"], x1)
+    return logits[:, 0].astype(jnp.float32), new_caches
+
+
+def lm_prefill(params, tokens, caches, *, mcfg):
+    """Teacher-forced prefill: run the full sequence through the TRAIN path
+    once for logits, then replay tokens through decode to warm the cache.
+    (Used by serving; for BSA the decode path is cache-exact so serving uses
+    decode replay only when needed.)"""
+    logits, _ = lm_apply(params, tokens, mcfg=mcfg)
+    return logits

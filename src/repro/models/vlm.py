@@ -1,0 +1,54 @@
+"""VLM (llava-next family): stubbed vision frontend + LM backbone.
+
+Per the assignment spec the modality frontend is a STUB — ``input_specs()``
+provides precomputed patch embeddings (anyres tiling happens upstream).  The
+projector (2-layer MLP, llava-style) and the backbone are real.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.losses import masked_mean_nll
+from repro.layers.nn import dense, dense_init, embed
+from repro.models.transformer import lm_apply, lm_init, lm_loss
+
+
+def vlm_init(key, mcfg) -> dict:
+    pd = mcfg.pdtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_v = mcfg.d_frontend or mcfg.d_model
+    return {
+        "projector": {
+            "fc1": dense_init(k1, d_v, mcfg.d_model, param_dtype=pd, bias=True),
+            "fc2": dense_init(k2, mcfg.d_model, mcfg.d_model, param_dtype=pd,
+                              bias=True),
+        },
+        "lm": lm_init(k3, mcfg),
+    }
+
+
+def _project(p, patches, cdt):
+    h = dense(p["fc1"], patches.astype(cdt))
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(cdt)
+    return dense(p["fc2"], h)
+
+
+def vlm_apply(params, tokens, patch_embeds, *, mcfg):
+    """tokens: (B, S_text); patch_embeds: (B, S_img, d_frontend).
+    Sequence = [image tokens; text tokens], total = S_img + S_text."""
+    cdt = mcfg.cdtype()
+    img = _project(params["projector"], patch_embeds, cdt)
+    txt = embed(params["lm"]["embed"], tokens, dtype=cdt)
+    x = jnp.concatenate([img, txt], axis=1)
+    return lm_apply(params["lm"], mcfg=mcfg, inputs_embeds=x)
+
+
+def vlm_loss(params, batch, *, mcfg):
+    """batch: {tokens (B,S_text), patch_embeds (B,S_img,dv), labels (B,S_text)}."""
+    logits, aux_loss = vlm_apply(params, batch["tokens"], batch["patch_embeds"],
+                                 mcfg=mcfg)
+    S_img = batch["patch_embeds"].shape[1]
+    loss = masked_mean_nll(logits[:, S_img:], batch["labels"])
+    return loss + 0.01 * aux_loss, {"loss": loss}

@@ -1,0 +1,42 @@
+"""AdamW (decoupled weight decay, paper Appendix A) — pure-pytree functional
+optimizer.  Optimizer-state dtype is configurable: fp32 default; bf16 for the
+398B config so m/v fit HBM (recorded per-config; see DESIGN §7)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, *, state_dtype=jnp.float32) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, opt_state, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                 weight_decay=0.01):
+    """Returns (new_params, new_opt_state).  ``lr`` may be a traced scalar."""
+    step = opt_state["step"] + 1
+    sdt = jax.tree.leaves(opt_state["m"])[0].dtype
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(sdt), v_new.astype(sdt)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,16 @@
+"""LR schedules (paper: cosine with lr=1e-3)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr: float, total_steps: int,
+                    warmup_steps: int = 0, min_lr_ratio: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.where(warmup_steps > 0, step / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    lr = base_lr * (min_lr_ratio + (1 - min_lr_ratio) * cos)
+    return jnp.where(step < warmup_steps, base_lr * warm, lr)

@@ -1,0 +1,74 @@
+"""Batched serving engine over the decode path.
+
+Static-batched generation: a fixed number of slots decode in lockstep (the
+BSA decode cache tracks one shared position — DESIGN §4 notes per-slot
+lengths as the continuous-batching extension).  Prefill is DECODE REPLAY:
+prompts stream token-by-token through ``serve_step``, which is exactly the
+cache semantics the train path matches (unit-tested bit-consistency), so
+generation after a replayed prefill equals teacher forcing.
+
+Jit boundaries: one compiled ``serve_step`` reused for prefill and decode.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import make_serve_step
+
+
+class ServingEngine:
+    def __init__(self, api, params, *, batch_slots: int, max_len: int,
+                 cache_dtype=jnp.float32, temperature: float = 0.0, seed: int = 0):
+        self.api = api
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self._rng = jax.random.PRNGKey(seed)
+        self.caches = api.cache_init(batch_slots, max_len, cache_dtype)
+        self._step = jax.jit(make_serve_step(api))
+        self.tokens_generated = 0
+        self.decode_time = 0.0
+
+    def reset(self, cache_dtype=jnp.float32):
+        self.caches = self.api.cache_init(self.B, self.max_len, cache_dtype)
+
+    def prefill(self, prompts: np.ndarray) -> np.ndarray:
+        """prompts: (B, P) int32 — replayed through the decode path.
+        Returns last logits' argmax (first generated token)."""
+        assert prompts.shape[0] == self.B
+        nxt = None
+        for t in range(prompts.shape[1]):
+            tok = jnp.asarray(prompts[:, t], jnp.int32)
+            nxt, logits, self.caches = self._step(self.params, self.caches, tok)
+        return np.asarray(nxt)
+
+    def _sample(self, logits):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self._rng, k = jax.random.split(self._rng)
+        return jax.random.categorical(k, logits / self.temperature).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, n_tokens: int) -> np.ndarray:
+        """Greedy/temperature generation.  Returns (B, n_tokens)."""
+        first = self.prefill(prompts)
+        out = [first]
+        tok = jnp.asarray(first)
+        t0 = time.time()
+        for _ in range(n_tokens - 1):
+            nxt, logits, self.caches = self._step(self.params, self.caches, tok)
+            tok = self._sample(logits)
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        self.decode_time += time.time() - t0
+        self.tokens_generated += self.B * n_tokens
+        return np.stack(out, axis=1)
+
+    @property
+    def tokens_per_second(self) -> float:
+        return self.tokens_generated / max(self.decode_time, 1e-9)

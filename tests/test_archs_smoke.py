@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests: reduced config, one forward + one grad step
+on CPU, asserting output shapes and finiteness.  Decode-capable archs also
+run two decode steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.reduce import SMOKE_SEQ, smoke_config
+from repro.models.api import model_api
+
+POINT_ARCHS = ["shapenet-bsa", "shapenet-bsa-no-group", "shapenet-bsa-group-cmp",
+               "shapenet-full", "shapenet-erwin"]
+
+
+def _finite(tree):
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS + POINT_ARCHS)
+def test_arch_smoke_train(arch):
+    mcfg = smoke_config(get_config(arch))
+    api = model_api(mcfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = api.make_batch(rng, 2, SMOKE_SEQ)
+
+    (loss, metrics), grads = jax.value_and_grad(api.loss, has_aux=True)(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    assert _finite(grads), f"{arch}: non-finite grads"
+
+    out = api.forward(params, batch)
+    assert not bool(jnp.isnan(out).any()), f"{arch}: NaN in forward"
+    if mcfg.family == "pointcloud":
+        assert out.shape == (2, SMOKE_SEQ, mcfg.out_dim)
+    elif mcfg.family == "audio":
+        assert out.shape[-1] == mcfg.vocab_size
+    elif mcfg.family == "vlm":
+        assert out.shape == (2, SMOKE_SEQ, mcfg.vocab_size)
+    else:
+        assert out.shape == (2, SMOKE_SEQ, mcfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-1.3b",
+                                  "jamba-1.5-large-398b", "qwen2-moe-a2.7b"])
+def test_arch_smoke_decode(arch):
+    mcfg = smoke_config(get_config(arch))
+    api = model_api(mcfg)
+    params = api.init(jax.random.PRNGKey(0))
+    caches = api.cache_init(2, SMOKE_SEQ, jnp.float32)
+    tok = jnp.array([1, 2], jnp.int32)
+    for _ in range(2):
+        logits, caches = api.decode_step(params, tok, caches)
+        assert logits.shape == (2, mcfg.vocab_size)
+        assert not bool(jnp.isnan(logits).any())
+        tok = logits.argmax(-1).astype(jnp.int32)
+
+
+def test_seamless_decode():
+    mcfg = smoke_config(get_config("seamless-m4t-medium"))
+    api = model_api(mcfg)
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = api.make_batch(rng, 2, SMOKE_SEQ)
+    from repro.models.encdec import encode
+    memory = encode(params, batch["frames"], mcfg=mcfg)
+    caches = api.cache_init(2, SMOKE_SEQ, jnp.float32, params=params, memory=memory)
+    logits, caches = api.decode_step(params, jnp.array([1, 2], jnp.int32), caches)
+    assert logits.shape == (2, mcfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_full_configs_have_exact_dims():
+    """Assigned-architecture dims must match the assignment table verbatim."""
+    expect = {
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    }
+    for arch, (L, d, h, kv, ff, V) in expect.items():
+        m = get_config(arch)
+        assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads, m.d_ff,
+                m.vocab_size) == (L, d, h, kv, ff, V), arch
+    assert get_config("qwen2-moe-a2.7b").n_experts == 60
+    assert get_config("qwen2-moe-a2.7b").experts_per_token == 4
+    assert get_config("phi3.5-moe-42b-a6.6b").n_experts == 16
+    assert get_config("jamba-1.5-large-398b").attn_period == 8
+    assert get_config("mamba2-1.3b").ssm_state == 128

@@ -1,0 +1,67 @@
+"""Unit tests for the HLO analyzer (roofline inputs)."""
+
+import textwrap
+
+from repro.launch.hlo_analysis import HloModule, _INSTR_RE, _type_bytes
+
+SAMPLE = textwrap.dedent("""\
+    HloModule jit_step
+
+    %body (p: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+      %p = (s32[], f32[16,128]{1,0}) parameter(0)
+      %w = f32[128,128]{1,0} get-tuple-element(%p), index=1
+      %x = f32[16,128]{1,0} get-tuple-element(%p), index=1
+      %ag = f32[16,512]{1,0} all-gather(%x), replica_groups=[4]<=[4], dimensions={1}
+      %dot.1 = f32[16,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %t = (s32[], f32[16,128]{1,0}) tuple(%p, %dot.1)
+    }
+
+    %cond (p2: (s32[], f32[16,128])) -> pred[] {
+      %p2 = (s32[], f32[16,128]{1,0}) parameter(0)
+      %iv = s32[] get-tuple-element(%p2), index=0
+      %lim = s32[] constant(8)
+      ROOT %lt = pred[] compare(%iv, %lim), direction=LT
+    }
+
+    ENTRY %main (a: f32[16,128]) -> f32[16,128] {
+      %a = f32[16,128]{1,0} parameter(0)
+      %init = (s32[], f32[16,128]{1,0}) tuple(%a, %a)
+      %wl = (s32[], f32[16,128]{1,0}, /*index=2*/f32[8,8]{1,0:T(8,128)(2,1)}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"8"}}
+      %ar = f32[16,128]{1,0} all-reduce(%a), replica_groups=[4]<=[4], to_apply=%body
+      ROOT %o = f32[16,128]{1,0} get-tuple-element(%wl), index=1
+    }
+""")
+
+
+def test_instr_regex_survives_tuple_types_and_layouts():
+    m = _INSTR_RE.match('  %wl = (s32[], f32[16,128]{1,0}, /*index=2*/f32[8,8]'
+                        '{1,0:T(8,128)(2,1)}) while(%init), condition=%c, body=%b')
+    assert m and m.group(3) == "while"
+    m = _INSTR_RE.match('  %d = f32[16,128]{1,0:T(8,128)} dot(%x, %w), '
+                        'lhs_contracting_dims={1}')
+    assert m and m.group(3) == "dot"
+
+
+def test_type_bytes():
+    assert _type_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _type_bytes("(s32[], bf16[4,8]{1,0})") == 4 + 4 * 8 * 2
+    assert _type_bytes("pred[]") == 1
+
+
+def test_loop_weighted_flops_and_collectives():
+    mod = HloModule(SAMPLE)
+    # while body runs 8× (known_trip_count)
+    assert mod.mult["body"] == 8
+    # dot: 2*16*128*128 per trip × 8 trips
+    assert mod.dot_flops() == 2 * 16 * 128 * 128 * 8
+    coll = mod.collectives()
+    assert coll["all-gather"]["bytes"] == 16 * 512 * 4 * 8          # in loop
+    assert coll["all-reduce"]["bytes"] == 16 * 128 * 4              # outside
+    assert coll["all-gather"]["count"] == 8
+
+
+def test_trip_count_fallback_from_condition_constant():
+    # strip the backend_config → falls back to the condition's s32 constant
+    stripped = SAMPLE.replace(', backend_config={"known_trip_count":{"n":"8"}}', "")
+    mod = HloModule(stripped)
+    assert mod.mult["body"] == 8

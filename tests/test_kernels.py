@@ -1,0 +1,134 @@
+"""Per-kernel allclose tests vs pure-jnp oracles, swept over shapes/dtypes.
+
+Kernels execute under interpret=True on CPU (the container has no TPU);
+the kernel bodies are identical to what runs on hardware.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,N,H,D,m", [
+    (1, 256, 2, 64, 64),
+    (2, 512, 4, 32, 128),
+    (1, 256, 1, 128, 256),
+    (2, 128, 2, 64, 32),
+])
+def test_ball_attention(B, N, H, D, m, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, N, H, D), dtype)
+    k = _rand(k2, (B, N, H, D), dtype)
+    v = _rand(k3, (B, N, H, D), dtype)
+    mask = jnp.ones((B, N), bool).at[:, -N // 8:].set(False)
+    out = ops.ball_attention(q, k, v, mask, m)
+    want = ref.ball_attention_ref(q, k, v, mask, m)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,N,H,D,w", [
+    (1, 256, 2, 64, 64),
+    (2, 512, 2, 32, 128),
+    (1, 128, 4, 128, 32),
+])
+def test_local_window(B, N, H, D, w, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, N, H, D), dtype)
+    k = _rand(k2, (B, N, H, D), dtype)
+    v = _rand(k3, (B, N, H, D), dtype)
+    out = ops.local_window_attention(q, k, v, w)
+    want = ref.local_window_attention_ref(q, k, v, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["plain", "causal", "block_causal", "key_valid"])
+@pytest.mark.parametrize("B,N,L,H,D", [
+    (1, 256, 256, 2, 64),
+    (2, 512, 64, 2, 64),     # skinny KV (compression-branch shape)
+    (1, 384, 48, 1, 128),    # non-power-of-two tiles
+])
+def test_flash(B, N, L, H, D, mode, dtype):
+    if mode == "causal" and L != N:
+        pytest.skip("token-causal assumes aligned q/k")
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, N, H, D), dtype)
+    k = _rand(k2, (B, L, H, D), dtype)
+    v = _rand(k3, (B, L, H, D), dtype)
+    kwargs = {}
+    if mode == "causal":
+        kwargs = dict(causal=True)
+    elif mode == "block_causal":
+        kwargs = dict(block_causal=True, ell=N // L)
+    elif mode == "key_valid":
+        kwargs = dict(key_valid=jnp.ones((B, L), bool).at[:, -L // 4:].set(False))
+    out = ops.flash_attention(q, k, v, **kwargs)
+    want = ref.flash_attention_ref(q, k, v, **kwargs)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,N,Hq,Hkv,D,ell,g,ks", [
+    (1, 256, 2, 1, 64, 8, 8, 4),
+    (2, 512, 4, 2, 64, 8, 16, 4),
+    (1, 256, 4, 4, 32, 16, 16, 2),   # MHA, bigger blocks
+    (1, 128, 8, 2, 64, 8, 8, 6),     # high GQA rep
+])
+def test_selection(B, N, Hq, Hkv, D, ell, g, ks, dtype):
+    k1, k2, k3, k4, k5 = jax.random.split(KEY, 5)
+    q = _rand(k1, (B, N, Hq, D), dtype)
+    k = _rand(k2, (B, N, Hkv, D), dtype)
+    v = _rand(k3, (B, N, Hkv, D), dtype)
+    G, nb = N // g, N // ell
+    idx = jax.random.randint(k4, (B, G, Hkv, ks), 0, nb)
+    valid = jax.random.bernoulli(k5, 0.85, (B, G, Hkv, ks))
+    mask = jnp.ones((B, N), bool).at[:, -N // 8:].set(False)
+    out = ops.selection_attention(q, k, v, idx, valid, mask, block_size=ell, group_size=g)
+    want = ref.selection_attention_ref(q, k, v, idx, valid, mask, block_size=ell, group_size=g)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_selection_all_invalid_group_is_zero():
+    B, N, Hq, Hkv, D, ell, g, ks = 1, 128, 2, 1, 32, 8, 8, 4
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, N, Hq, D), jnp.float32)
+    k = _rand(k2, (B, N, Hkv, D), jnp.float32)
+    v = _rand(k3, (B, N, Hkv, D), jnp.float32)
+    idx = jnp.zeros((B, N // g, Hkv, ks), jnp.int32)
+    valid = jnp.zeros((B, N // g, Hkv, ks), bool).at[:, 1:].set(True)
+    out = ops.selection_attention(q, k, v, idx, valid, None, block_size=ell, group_size=g)
+    assert not bool(jnp.isnan(out).any())
+    np.testing.assert_allclose(np.asarray(out[:, :g]), 0.0, atol=1e-6)
+
+
+def test_flash_matches_full_attention_einsum():
+    """flash kernel == plain softmax attention (independent oracle)."""
+    B, N, H, D = 1, 256, 2, 64
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q, k, v = (_rand(kk, (B, N, H, D), jnp.float32) for kk in (k1, k2, k3))
+    out = ops.flash_attention(q, k, v, causal=True)
+    logits = jnp.einsum("bnhd,bmhd->bhnm", q, k) / (D ** 0.5)
+    mask = jnp.tril(jnp.ones((N, N), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    want = jnp.einsum("bhnm,bmhd->bnhd", jax.nn.softmax(logits, axis=-1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)

@@ -1,0 +1,203 @@
+"""Substrate tests: optimizer math, checkpoint roundtrip + reshard, trainer
+loss-decrease + resume, watchdog, serving decode == teacher forcing,
+gradient compression, data pipelines."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.configs import get_config
+from repro.configs.reduce import SMOKE_SEQ, smoke_config
+from repro.data import ElasticityDataset, ShapeNetCarDataset, lm_batches
+from repro.models.api import model_api
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
+from repro.runtime import Trainer, TrainerConfig, Watchdog
+from repro.serving import ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_reference():
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    st = adamw_init(p)
+    p2, st2 = adamw_update(p, g, st, lr=0.1, weight_decay=0.0)
+    # first step: mhat = g, vhat = g², delta ≈ sign(g)
+    want = p["w"] - 0.1 * g["w"] / (jnp.abs(g["w"]) + 1e-8)
+    np.testing.assert_allclose(p2["w"], want, rtol=1e-5)
+    assert int(st2["step"]) == 1
+
+
+def test_adamw_weight_decay_decoupled():
+    p = {"w": jnp.array([10.0])}
+    g = {"w": jnp.array([0.0])}
+    st = adamw_init(p)
+    p2, _ = adamw_update(p, g, st, lr=0.1, weight_decay=0.01)
+    np.testing.assert_allclose(p2["w"], 10.0 - 0.1 * 0.01 * 10.0, rtol=1e-6)
+
+
+def test_cosine_schedule():
+    assert float(cosine_schedule(0, base_lr=1.0, total_steps=100, warmup_steps=10)) == 0.0
+    assert float(cosine_schedule(10, base_lr=1.0, total_steps=100, warmup_steps=10)) == pytest.approx(1.0)
+    assert float(cosine_schedule(100, base_lr=1.0, total_steps=100, warmup_steps=10)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((4,)) * 4.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(10.0)
+    from repro.optim import global_norm
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_prune(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=2, async_save=False)
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "opt": {"m": jnp.zeros((2, 3)), "step": jnp.array(7, jnp.int32)}}
+    for s in (10, 20, 30):
+        mgr.save(s, state, extra={"tag": s})
+    assert latest_step(tmp_path) == 30
+    # pruned to keep_last=2
+    assert sorted(int(p.name.split("_")[1]) for p in tmp_path.iterdir()) == [20, 30]
+    got, meta = mgr.restore(jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+    assert meta["step"] == 30 and meta["extra"]["tag"] == 30
+    np.testing.assert_array_equal(got["params"]["w"], state["params"]["w"])
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep_last=3, async_save=True)
+    mgr.save(1, {"w": jnp.ones((8,))})
+    mgr.wait()
+    assert latest_step(tmp_path) == 1
+
+
+def test_checkpoint_reshard_on_restore(tmp_path):
+    """Elastic restart: save unsharded, restore with a different sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    mgr.save(5, state)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    got, _ = mgr.restore(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state), shardings=sh)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(state["w"]))
+    assert got["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_straggler_detection():
+    events = []
+    wd = Watchdog(straggler_factor=2.0,
+                  on_straggler=lambda s, d, e: events.append((s, d)))
+    for i in range(10):
+        wd.step(i, 0.1)
+    wd.step(10, 0.5)          # 5× slower than EWMA → straggler
+    assert len(events) == 1 and events[0][0] == 10
+    wd.step(11, 0.1)          # baseline not poisoned
+    assert len(events) == 1
+
+
+# ---------------------------------------------------------------------------
+# trainer end-to-end (tiny LM): loss decreases, checkpoint resume
+# ---------------------------------------------------------------------------
+
+def _tiny_lm():
+    m = smoke_config(get_config("tinyllama-1.1b"))
+    return m, model_api(m)
+
+
+def test_trainer_loss_decreases_and_resumes(tmp_path):
+    mcfg, api = _tiny_lm()
+    cfg = TrainerConfig(base_lr=3e-3, total_steps=40, warmup_steps=2,
+                        ckpt_dir=str(tmp_path), ckpt_every=10, log_every=100)
+    tr = Trainer(api, cfg)
+    data = lm_batches(vocab_size=mcfg.vocab_size, batch_size=2,
+                      seq_len=SMOKE_SEQ, seed=0)
+    params, opt = tr.fit(data, steps=21)
+    losses = [m["loss"] for m in tr.metrics_history]
+    assert losses[-1] < losses[0], f"loss did not decrease: {losses}"
+    assert latest_step(tmp_path) is not None
+
+    # resume: new trainer picks up the checkpoint and continues
+    tr2 = Trainer(api, cfg)
+    data2 = lm_batches(vocab_size=mcfg.vocab_size, batch_size=2,
+                       seq_len=SMOKE_SEQ, seed=0, start_step=21)
+    p2, o2 = tr2.fit(data2, steps=2)
+    assert int(o2["step"]) >= 22  # optimizer steps continued from restore
+
+
+# ---------------------------------------------------------------------------
+# serving: decode replay == teacher forcing
+# ---------------------------------------------------------------------------
+
+def test_serving_matches_teacher_forcing():
+    mcfg, api = _tiny_lm()
+    params = api.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, mcfg.vocab_size, (2, 32), dtype=np.int32)
+
+    eng = ServingEngine(api, params, batch_slots=2, max_len=SMOKE_SEQ)
+    gen = eng.generate(prompts, n_tokens=4)
+    assert gen.shape == (2, 4)
+
+    # teacher-forced reference: greedy tokens from the train-path logits
+    import jax.numpy as jnp
+    from repro.models.transformer import lm_apply
+    toks = jnp.asarray(prompts)
+    logits, _ = lm_apply(params, toks, mcfg=mcfg)
+    want_first = np.asarray(jnp.argmax(logits[:, -1], -1))
+    np.testing.assert_array_equal(gen[:, 0], want_first)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compressed_psum_error_feedback():
+    from repro.optim.compress import _dequantize, _quantize
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(1000), jnp.float32)
+    q, s, resid = _quantize(g)
+    deq = _dequantize(q, s, g.shape)
+    np.testing.assert_allclose(np.asarray(deq + resid), np.asarray(g), atol=1e-6)
+    # quantization error bounded by scale/2 per element
+    assert float(jnp.abs(resid).max()) <= float(s.max()) * 0.5 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# data pipelines
+# ---------------------------------------------------------------------------
+
+def test_shapenet_dataset_shapes_and_determinism():
+    ds = ShapeNetCarDataset("train", ball_size=256)
+    a, b = ds[3], ds[3]
+    assert a["feats"].shape == (3840, 7)          # 3586 → 15 balls of 256
+    assert a["mask"].sum() == 3586
+    np.testing.assert_array_equal(a["feats"], b["feats"])
+    batch = next(ds.batches(2, seed=0))
+    assert batch["feats"].shape == (2, 3840, 7)
+    assert np.isfinite(batch["target"]).all()
+
+
+def test_elasticity_dataset():
+    ds = ElasticityDataset("test", ball_size=256)
+    it = ds[0]
+    assert it["feats"].shape == (1024, 6) and it["mask"].sum() == 972
+
+
+def test_lm_batches_deterministic_restart():
+    a = list(zip(range(3), lm_batches(vocab_size=100, batch_size=2, seq_len=16, seed=5)))
+    b = next(lm_batches(vocab_size=100, batch_size=2, seq_len=16, seed=5, start_step=2))
+    np.testing.assert_array_equal(a[2][1]["tokens"], b["tokens"])
