@@ -9,7 +9,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.core import BSAConfig, bsa_attention, bsa_init, full_attention

@@ -134,10 +134,57 @@ def apply_overrides(mcfg, args):
     return mcfg.scaled(bsa=bsa, **m)
 
 
+def time_kernel_train_step(args) -> None:
+    """§Kernel-path training: EXECUTE (not just lower) one full fwd+bwd
+    train step of BSA attention with ``use_kernels=True`` and report wall
+    time — the measurement the differentiable Pallas path unlocks.  On this
+    CPU container kernels run under interpret mode (set
+    REPRO_PALLAS_INTERPRET=0 on TPU hosts for compiled numbers).
+
+      PYTHONPATH=src python -m benchmarks.perf_iter --kernel-step \
+          --n 256 --batch 1 --heads 4 --kv-heads 2 --head-dim 32
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import emit, time_fn
+    from repro.core import BSAConfig, bsa_attention, bsa_init
+    from repro.kernels.common import should_interpret
+
+    B, N, Hq, Hkv, D = args.batch, args.n, args.heads, args.kv_heads, args.head_dim
+    ball = min(64, N)
+    if N % ball or N % 8:
+        raise SystemExit(f"--n {N} must be a multiple of the ball size {ball} "
+                         "(and of the group size 8)")
+    cfg = BSAConfig(ball_size=ball, local_window=ball,
+                    cmp_block=args.ell or 8, slc_block=args.ell or 8,
+                    top_k=args.topk or 4, group_size=8, use_kernels=True)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, N, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, N, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, N, Hkv, D), jnp.float32)
+    params = bsa_init(ks[3], cfg, n_heads=Hq, n_kv_heads=Hkv, head_dim=D,
+                      d_model=Hq * D)
+
+    def loss(p, q, k, v):
+        return jnp.sum(bsa_attention(p, q, k, v, cfg=cfg) ** 2)
+
+    step = jax.jit(jax.value_and_grad(loss))
+
+    def run(p, q, k, v):
+        out, grads = step(p, q, k, v)
+        return out
+
+    us = time_fn(run, params, q, k, v, warmup=1, iters=3)
+    mode = "interpret" if should_interpret() else "compiled"
+    emit(f"perf_iter/kernel_train_step_b{B}_n{N}", us,
+         f"mode={mode};heads={Hq}/{Hkv};d={D}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
     ap.add_argument("--layout", default="tp", choices=["tp", "dp"])
     ap.add_argument("--chunk", type=int, default=None)
     ap.add_argument("--topk", type=int, default=0)
@@ -146,7 +193,20 @@ def main():
     ap.add_argument("--attn-seq", action="store_true")
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--kernel-step", action="store_true",
+                    help="time one executed fwd+bwd BSA step on the kernel path")
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--kv-heads", type=int, default=2)
+    ap.add_argument("--head-dim", type=int, default=32)
     args = ap.parse_args()
+
+    if args.kernel_step:
+        time_kernel_train_step(args)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required (unless --kernel-step)")
 
     mcfg = apply_overrides(get_config(args.arch), args)
     lowered, mesh = lower_with_overrides(args.arch, args.shape, mcfg=mcfg,

@@ -2,11 +2,65 @@
 Prints ``name,us_per_call,derived`` CSV lines.
 
   PYTHONPATH=src python -m benchmarks.run [--quick|--full]
+  python benchmarks/run.py --smoke     # CI: one tiny fwd+bwd kernel-path iter
 """
 
 import argparse
+import os
 import sys
 import traceback
+from pathlib import Path
+
+if __package__ in (None, ""):                    # `python benchmarks/run.py`
+    _root = Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_root))
+    if "repro" not in sys.modules:               # no editable install: use src/
+        sys.path.insert(0, str(_root / "src"))
+
+
+def smoke() -> None:
+    """One tiny fwd+bwd iteration through BOTH attention stacks on the Pallas
+    kernel path (interpret mode on CPU) — proves the custom-VJP kernels stay
+    jit-compatible end-to-end.  Exits non-zero on NaN/Inf."""
+    os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (BSAConfig, bsa_attention, bsa_init,
+                            nsa_causal_attention, nsa_init)
+
+    B, N, Hq, Hkv, D, dm = 1, 128, 4, 2, 32, 64
+    cfg = BSAConfig(ball_size=32, local_window=32, cmp_block=8, slc_block=8,
+                    top_k=2, group_size=8, use_kernels=True)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, N, Hq, D))
+    k = jax.random.normal(ks[1], (B, N, Hkv, D))
+    v = jax.random.normal(ks[2], (B, N, Hkv, D))
+    mask = jnp.ones((B, N), bool).at[:, -16:].set(False)
+
+    runs = [
+        ("bsa", bsa_init, lambda p: bsa_attention(p, q, k, v, cfg=cfg, mask=mask)),
+        ("nsa_causal", nsa_init, lambda p: nsa_causal_attention(p, q, k, v, cfg=cfg)),
+    ]
+    ok = True
+    for name, init, apply in runs:
+        params = init(ks[3], cfg, n_heads=Hq, n_kv_heads=Hkv, head_dim=D, d_model=dm)
+        step = jax.jit(jax.value_and_grad(lambda p: jnp.sum(apply(p) ** 2)))
+        t0 = time.perf_counter()
+        loss, grads = step(params)
+        jax.block_until_ready((loss, grads))
+        dt = time.perf_counter() - t0
+        finite = bool(jnp.isfinite(loss)) and all(
+            bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+        ok &= finite
+        print(f"smoke/{name}_train_step,{dt * 1e6:.1f},"
+              f"loss={float(loss):.4f};finite={finite}", flush=True)
+    if not ok:
+        print("FAILURES: smoke (non-finite loss/grads)")
+        sys.exit(1)
+    print("# smoke complete (kernel path fwd+bwd, interpret mode)")
 
 
 def main() -> None:
@@ -14,7 +68,12 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--max-n", type=int, default=4096)
     ap.add_argument("--skip", default="", help="comma list: table1,table2,fig3,appb,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny fwd+bwd kernel-path iteration (CI gate)")
     args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
     skip = set(args.skip.split(","))
     failures = []
 
@@ -38,7 +97,6 @@ def main() -> None:
 
     def _roof():
         from benchmarks import roofline
-        from pathlib import Path
         cells = roofline.load_cells(Path("results/dryrun"))
         if not cells:
             print("# (no dry-run artifacts; run repro.launch.dryrun first)")

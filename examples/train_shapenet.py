@@ -9,7 +9,6 @@ shapenet-bsa-group-cmp | shapenet-full | shapenet-erwin.
 
 import argparse
 
-import numpy as np
 
 from repro.configs import get_config
 from repro.data import ShapeNetCarDataset
@@ -39,11 +38,17 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--layers", type=int, default=0, help="override (0=config)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="train through the fused Pallas kernels (the custom-VJP "
+                         "backward path; interpret mode on CPU, compiled on TPU)")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch)
     if args.layers:
         mcfg = mcfg.scaled(n_layers=args.layers)
+    if args.use_kernels:
+        import dataclasses
+        mcfg = mcfg.scaled(bsa=dataclasses.replace(mcfg.bsa, use_kernels=True))
     api = model_api(mcfg)
     train_ds = ShapeNetCarDataset("train")
     test_ds = ShapeNetCarDataset("test")

@@ -13,7 +13,6 @@ unit-tested for exactness against the sequential reference on a 4-way mesh.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -9,6 +9,11 @@ running-max bookkeeping.  MXU-aligned: the two matmuls are (m,D)×(D,m) and
 VMEM budget per grid step (m=256, D=128, bf16 in / fp32 logits):
   q,k,v: 3·256·128·2 B = 192 KiB;  logits+p: 2·256·256·4 B = 512 KiB;
   out: 128 KiB  →  < 1 MiB of the ~16 MiB VMEM.
+
+Differentiable: forward additionally emits the per-row logsumexp (BH, N);
+the backward is a single-pass per-ball kernel (the ball-is-the-tile layout
+means dQ, dK, dV of a ball depend only on that ball) that recomputes
+p = exp(s − lse) and produces all three gradients in one grid sweep.
 """
 
 from __future__ import annotations
@@ -19,12 +24,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import NEG_INF, should_interpret
+from repro.kernels.common import (NEG_INF, lse_finalize, p_from_lse,
+                                  should_interpret)
 
 __all__ = ["ball_attention_kernel_call"]
 
 
-def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale: float):
+def _fwd_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, lse_ref, *, scale: float):
     q = q_ref[0].astype(jnp.float32)                      # (m, D)
     k = k_ref[0].astype(jnp.float32)
     v = v_ref[0]
@@ -34,11 +40,96 @@ def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale: float):
     mx = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), NEG_INF / 2)
     p = jnp.exp(s - mx)
     p = jnp.where(s <= NEG_INF / 2, 0.0, p)
-    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
-    p = (p / denom).astype(v.dtype)
-    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    denom = jnp.maximum(l, 1e-20)
+    o = jax.lax.dot_general((p / denom).astype(v.dtype), v, (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
     o_ref[0] = o.astype(o_ref.dtype)
+    lse_ref[0] = lse_finalize(mx, l)[:, 0]
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, bias_ref, do_ref, lse_ref, delta_ref,
+                dq_ref, dk_ref, dv_ref, *, scale: float):
+    q = q_ref[0].astype(jnp.float32)                      # (m, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = s + bias_ref[0]
+    p = p_from_lse(s, lse_ref[0][:, None])                # (m, m)
+    dv = jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_ref[0][:, None]) * scale         # (m, m)
+    dq = jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dk = jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dq_ref[0] = dq.astype(dq_ref.dtype)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _fwd_call(q, k, v, key_bias, *, ball_size, n_heads, interpret):
+    BH, N, D = q.shape
+    m = ball_size
+    assert N % m == 0
+    H = n_heads
+    blk = pl.BlockSpec((1, m, D), lambda b, i: (b, i, 0))
+    bias_blk = pl.BlockSpec((1, m), lambda b, i: (b // H, i))
+    lse_blk = pl.BlockSpec((1, m), lambda b, i: (b, i))
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5)),
+        grid=(BH, N // m),
+        in_specs=[blk, blk, blk, bias_blk],
+        out_specs=(blk, lse_blk),
+        out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+                   jax.ShapeDtypeStruct((BH, N), jnp.float32)),
+        interpret=interpret,
+    )(q, k, v, key_bias)
+
+
+def _bwd_call(q, k, v, key_bias, do, lse, delta, *, ball_size, n_heads, interpret):
+    BH, N, D = q.shape
+    m = ball_size
+    H = n_heads
+    blk = pl.BlockSpec((1, m, D), lambda b, i: (b, i, 0))
+    bias_blk = pl.BlockSpec((1, m), lambda b, i: (b // H, i))
+    row_blk = pl.BlockSpec((1, m), lambda b, i: (b, i))
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=1.0 / (D ** 0.5)),
+        grid=(BH, N // m),
+        in_specs=[blk, blk, blk, bias_blk, blk, row_blk, row_blk],
+        out_specs=(blk, blk, blk),
+        out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+                   jax.ShapeDtypeStruct((BH, N, D), k.dtype),
+                   jax.ShapeDtypeStruct((BH, N, D), v.dtype)),
+        interpret=interpret,
+    )(q, k, v, key_bias, do, lse, delta)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_vjp(ball_size: int, n_heads: int, interpret: bool):
+    kw = dict(ball_size=ball_size, n_heads=n_heads, interpret=interpret)
+
+    @jax.custom_vjp
+    def attend(q, k, v, key_bias):
+        return _fwd_call(q, k, v, key_bias, **kw)[0]
+
+    def attend_fwd(q, k, v, key_bias):
+        o, lse = _fwd_call(q, k, v, key_bias, **kw)
+        return o, (q, k, v, key_bias, o, lse)
+
+    def attend_bwd(res, do):
+        q, k, v, key_bias, o, lse = res
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+        dq, dk, dv = _bwd_call(q, k, v, key_bias, do, lse, delta, **kw)
+        return dq, dk, dv, None                           # key bias: mask, no grad
+
+    attend.defvjp(attend_fwd, attend_bwd)
+    return attend
 
 
 @functools.partial(jax.jit, static_argnames=("ball_size", "n_heads", "interpret"))
@@ -46,23 +137,7 @@ def ball_attention_kernel_call(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                                key_bias: jnp.ndarray, *, ball_size: int,
                                n_heads: int, interpret: bool | None = None):
     """q,k,v: (BH, N, D) flattened over batch×heads; key_bias: (B, N) fp32
-    additive (0 / NEG_INF).  Returns (BH, N, D)."""
-    BH, N, D = q.shape
-    m = ball_size
-    assert N % m == 0
-    nballs = N // m
-    H = n_heads
+    additive (0 / NEG_INF).  Returns (BH, N, D).  Differentiable in q, k, v."""
     if interpret is None:
         interpret = should_interpret()
-
-    grid = (BH, nballs)
-    blk = pl.BlockSpec((1, m, D), lambda b, i: (b, i, 0))
-    bias_blk = pl.BlockSpec((1, m), lambda b, i: (b // H, i))
-    return pl.pallas_call(
-        functools.partial(_kernel, scale=1.0 / (D ** 0.5)),
-        grid=grid,
-        in_specs=[blk, blk, blk, bias_blk],
-        out_specs=blk,
-        out_shape=jax.ShapeDtypeStruct((BH, N, D), q.dtype),
-        interpret=interpret,
-    )(q, k, v, key_bias)
+    return _make_vjp(ball_size, n_heads, interpret)(q, k, v, key_bias)

@@ -3,6 +3,13 @@
 TPU is the TARGET; on this CPU container kernels run under interpret mode
 (``interpret=True`` executes the kernel body in Python for correctness).
 ``should_interpret()`` auto-detects; set REPRO_PALLAS_INTERPRET=0/1 to force.
+
+All four kernels are differentiable via ``jax.custom_vjp``: the forward
+kernels emit a per-query-row logsumexp residual (``lse = m + log l``) and the
+backward kernels recompute the attention probabilities per tile as
+``p = exp(s − lse)`` (FlashAttention-style recomputation — O(N) residual
+memory instead of materialising p).  ``lse_finalize`` / ``p_from_lse`` keep
+the two sides of that contract in one place.
 """
 
 from __future__ import annotations
@@ -10,8 +17,14 @@ from __future__ import annotations
 import os
 
 import jax
+import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+# Sentinel logsumexp for query rows with NO valid key (fully-masked ball /
+# all-invalid selection group): exp(s − LSE_EMPTY) underflows to exactly 0
+# for any finite logit s, so backward recomputation yields p ≡ 0 for the row.
+LSE_EMPTY = 1e30
 
 
 def should_interpret() -> bool:
@@ -19,3 +32,18 @@ def should_interpret() -> bool:
     if env is not None:
         return env not in ("0", "false", "False")
     return jax.default_backend() != "tpu"
+
+
+def lse_finalize(m_safe, l):
+    """Per-row logsumexp residual from running max/sum.  (rows, 1) fp32.
+
+    ``l ≥ 1`` whenever any key is valid (the max term contributes exp(0)=1),
+    so ``lse ≥ m ≥ s`` and backward ``exp(s − lse) ≤ 1`` never overflows.
+    """
+    return jnp.where(l > 0.0, m_safe + jnp.log(jnp.maximum(l, 1e-30)), LSE_EMPTY)
+
+
+def p_from_lse(s, lse):
+    """Recompute normalised attention probabilities from logits + residual."""
+    p = jnp.exp(s - lse)
+    return jnp.where(s <= NEG_INF / 2, 0.0, p)

@@ -13,6 +13,13 @@ scratch).  Used for:
 
 Grid: (BH, nQ, nK) with K innermost.  Scratch: m, l: (Tq, 1) fp32,
 acc: (Tq, D) fp32.  VMEM @ Tq=Tk=256, D=128 ≈ 0.6 MiB.
+
+Differentiable (FlashAttention-style recomputation backward): the forward
+additionally emits per-row logsumexp (BH, N); the backward recomputes
+p = exp(s − lse) per tile in two kernels — a dQ kernel on the forward grid
+(K innermost, dQ accumulated in scratch) and a dK/dV kernel on the
+transposed grid (BH, nK, nQ) with Q innermost, so each gradient is a pure
+per-tile accumulation with no cross-grid races.
 """
 
 from __future__ import annotations
@@ -24,7 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG_INF, should_interpret
+from repro.kernels.common import (NEG_INF, lse_finalize, p_from_lse,
+                                  should_interpret)
 
 __all__ = ["flash_attention_kernel_call"]
 
@@ -37,9 +45,23 @@ def _pick_tile(n: int, pref: int) -> int:
     return t
 
 
-def _kernel(q_ref, k_ref, v_ref, kbias_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, n_k: int, tq: int, tk: int,
-            causal: bool, block_causal: bool, ell: int):
+def _mask_logits(s, i, j, *, tq, tk, causal, block_causal, ell):
+    """Apply the virtual (index-generated) causal / block-causal mask."""
+    if not (causal or block_causal):
+        return s
+    qpos = i * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    kidx = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    if block_causal:
+        ok = (kidx + 1) * ell - 1 < qpos                   # coarse block ends before t
+    else:
+        ok = kidx <= qpos
+    return jnp.where(ok, s, NEG_INF)
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, kbias_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr, *,
+                scale: float, n_k: int, tq: int, tk: int,
+                causal: bool, block_causal: bool, ell: int):
     i = pl.program_id(1)
     j = pl.program_id(2)
 
@@ -55,15 +77,8 @@ def _kernel(q_ref, k_ref, v_ref, kbias_ref, o_ref, m_scr, l_scr, acc_scr, *,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     s = s + kbias_ref[0]                                   # (Tk,) key-validity bias
-
-    if causal or block_causal:
-        qpos = i * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
-        kidx = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
-        if block_causal:
-            ok = (kidx + 1) * ell - 1 < qpos               # coarse block ends before t
-        else:
-            ok = kidx <= qpos
-        s = jnp.where(ok, s, NEG_INF)
+    s = _mask_logits(s, i, j, tq=tq, tk=tk, causal=causal,
+                     block_causal=block_causal, ell=ell)
 
     m_prev = m_scr[...]                                    # (Tq, 1)
     m_cur = jnp.max(s, axis=-1, keepdims=True)
@@ -85,6 +100,181 @@ def _kernel(q_ref, k_ref, v_ref, kbias_ref, o_ref, m_scr, l_scr, acc_scr, *,
     def _finalize():
         denom = jnp.maximum(l_scr[...], 1e-20)
         o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        m_safe_f = jnp.maximum(m_scr[...], NEG_INF / 2)
+        lse_ref[0] = lse_finalize(m_safe_f, l_scr[...])[:, 0]
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, kbias_ref, do_ref, lse_ref, delta_ref,
+               dq_ref, dq_scr, *,
+               scale: float, n_k: int, tq: int, tk: int,
+               causal: bool, block_causal: bool, ell: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    q = q_ref[0].astype(jnp.float32)                       # (Tq, D)
+    k = k_ref[0].astype(jnp.float32)                       # (Tk, D)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = s + kbias_ref[0]
+    s = _mask_logits(s, i, j, tq=tq, tk=tk, causal=causal,
+                     block_causal=block_causal, ell=ell)
+    p = p_from_lse(s, lse_ref[0][:, None])                 # (Tq, Tk)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_ref[0][:, None]) * scale
+    dq_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_k - 1)
+    def _finalize():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, kbias_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *,
+                scale: float, n_q: int, tq: int, tk: int,
+                causal: bool, block_causal: bool, ell: int):
+    j = pl.program_id(1)                                   # K tile (outer)
+    i = pl.program_id(2)                                   # Q tile (inner)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0].astype(jnp.float32)                       # (Tq, D)
+    k = k_ref[0].astype(jnp.float32)                       # (Tk, D)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = s + kbias_ref[0]
+    s = _mask_logits(s, i, j, tq=tq, tk=tk, causal=causal,
+                     block_causal=block_causal, ell=ell)
+    p = p_from_lse(s, lse_ref[0][:, None])                 # (Tq, Tk)
+    dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_ref[0][:, None]) * scale
+    dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_q - 1)
+    def _finalize():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _fwd_call(q, k, v, key_bias, *, n_heads, tq, tk, causal, block_causal,
+              ell, interpret):
+    BH, N, D = q.shape
+    L = k.shape[1]
+    H = n_heads
+    n_k = L // tk
+    kern = functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5), n_k=n_k,
+                             tq=tq, tk=tk, causal=causal,
+                             block_causal=block_causal, ell=ell)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, N // tq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tk), lambda b, i, j: (b // H, j)),
+        ],
+        out_specs=(pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+                   pl.BlockSpec((1, tq), lambda b, i, j: (b, i))),
+        out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+                   jax.ShapeDtypeStruct((BH, N), jnp.float32)),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, key_bias)
+
+
+def _bwd_calls(q, k, v, key_bias, do, lse, delta, *, n_heads, tq, tk,
+               causal, block_causal, ell, interpret):
+    BH, N, D = q.shape
+    L = k.shape[1]
+    H = n_heads
+    n_q, n_k = N // tq, L // tk
+    mask_kw = dict(scale=1.0 / (D ** 0.5), tq=tq, tk=tk, causal=causal,
+                   block_causal=block_causal, ell=ell)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, n_k=n_k, **mask_kw),
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tk), lambda b, i, j: (b // H, j)),
+            pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, tq), lambda b, i, j: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((tq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, key_bias, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, n_q=n_q, **mask_kw),
+        grid=(BH, n_k, n_q),
+        in_specs=[
+            pl.BlockSpec((1, tq, D), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, tk, D), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, tk, D), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, tk), lambda b, j, i: (b // H, j)),
+            pl.BlockSpec((1, tq, D), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, tq), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, tq), lambda b, j, i: (b, i)),
+        ],
+        out_specs=(pl.BlockSpec((1, tk, D), lambda b, j, i: (b, j, 0)),
+                   pl.BlockSpec((1, tk, D), lambda b, j, i: (b, j, 0))),
+        out_shape=(jax.ShapeDtypeStruct((BH, L, D), k.dtype),
+                   jax.ShapeDtypeStruct((BH, L, D), v.dtype)),
+        scratch_shapes=[pltpu.VMEM((tk, D), jnp.float32),
+                        pltpu.VMEM((tk, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, key_bias, do, lse, delta)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _make_vjp(n_heads: int, tq: int, tk: int, causal: bool, block_causal: bool,
+              ell: int, interpret: bool):
+    kw = dict(n_heads=n_heads, tq=tq, tk=tk, causal=causal,
+              block_causal=block_causal, ell=ell, interpret=interpret)
+
+    @jax.custom_vjp
+    def attend(q, k, v, key_bias):
+        return _fwd_call(q, k, v, key_bias, **kw)[0]
+
+    def attend_fwd(q, k, v, key_bias):
+        o, lse = _fwd_call(q, k, v, key_bias, **kw)
+        return o, (q, k, v, key_bias, o, lse)
+
+    def attend_bwd(res, do):
+        q, k, v, key_bias, o, lse = res
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+        dq, dk, dv = _bwd_calls(q, k, v, key_bias, do, lse, delta, **kw)
+        return dq, dk, dv, None                            # key bias: mask, no grad
+
+    attend.defvjp(attend_fwd, attend_bwd)
+    return attend
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -93,34 +283,13 @@ def flash_attention_kernel_call(q, k, v, key_bias, *, n_heads: int,
                                 tq: int = 256, tk: int = 256,
                                 causal: bool = False, block_causal: bool = False,
                                 ell: int = 1, interpret: bool | None = None):
-    """q: (BH, N, D); k,v: (BH, L, D); key_bias: (B, L) fp32 additive."""
+    """q: (BH, N, D); k,v: (BH, L, D); key_bias: (B, L) fp32 additive.
+    Differentiable in q, k, v."""
     BH, N, D = q.shape
     L = k.shape[1]
     tq = _pick_tile(N, tq)
     tk = _pick_tile(L, tk)
-    H = n_heads
     if interpret is None:
         interpret = should_interpret()
-    n_k = L // tk
-
-    grid = (BH, N // tq, n_k)
-    return pl.pallas_call(
-        functools.partial(_kernel, scale=1.0 / (D ** 0.5), n_k=n_k, tq=tq,
-                          tk=tk, causal=causal, block_causal=block_causal,
-                          ell=ell),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, tk), lambda b, i, j: (b // H, j)),
-        ],
-        out_specs=pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, N, D), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((tq, 1), jnp.float32),
-            pltpu.VMEM((tq, 1), jnp.float32),
-            pltpu.VMEM((tq, D), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, k, v, key_bias)
+    return _make_vjp(n_heads, tq, tk, causal, block_causal, ell, interpret)(
+        q, k, v, key_bias)

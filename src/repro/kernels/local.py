@@ -4,6 +4,14 @@ Query block i attends causally within block i and fully to block i−1 —
 the TPU-aligned blocked equivalent of a sliding window.  The previous block
 is fetched by passing K (and V) twice with two index maps (self / prev),
 so one grid step holds a (w, D) query tile and a (2w, D) key tile in VMEM.
+
+Differentiable: forward also emits per-row logsumexp.  The backward is a
+single-pass per-block kernel — dQ of block i needs K/V of blocks {i−1, i}
+(already the forward fetch pattern), while dK/dV of block i get
+contributions from query blocks {i, i+1}; the NEXT query block (with its
+dO/lse/delta rows) is fetched via a second set of index maps, so each grid
+cell owns its output blocks outright and no cross-cell accumulation is
+needed.
 """
 
 from __future__ import annotations
@@ -14,12 +22,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import NEG_INF, should_interpret
+from repro.kernels.common import (NEG_INF, lse_finalize, p_from_lse,
+                                  should_interpret)
 
 __all__ = ["local_window_kernel_call"]
 
 
-def _kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, o_ref, *, scale: float, w: int):
+def _fwd_kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, o_ref, lse_ref, *,
+                scale: float, w: int):
     i = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32)                       # (w, D)
     k = jnp.concatenate([kp_ref[0], ks_ref[0]], axis=0).astype(jnp.float32)  # (2w, D)
@@ -34,28 +44,137 @@ def _kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, o_ref, *, scale: float, w: in
     mx = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), NEG_INF / 2)
     p = jnp.exp(s - mx)
     p = jnp.where(s <= NEG_INF / 2, 0.0, p)
-    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    denom = jnp.maximum(l, 1e-20)
     o = jax.lax.dot_general((p / denom).astype(v.dtype), v, (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
     o_ref[0] = o.astype(o_ref.dtype)
+    lse_ref[0] = lse_finalize(mx, l)[:, 0]
+
+
+def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref,
+                dos_ref, don_ref, lses_ref, lsen_ref, dels_ref, deln_ref,
+                dq_ref, dk_ref, dv_ref, *, scale: float, w: int, n_b: int):
+    i = pl.program_id(1)
+    qs = qs_ref[0].astype(jnp.float32)                     # (w, D)
+    ks = ks_ref[0].astype(jnp.float32)
+    vs = vs_ref[0].astype(jnp.float32)
+    dos = dos_ref[0].astype(jnp.float32)
+    kcat = jnp.concatenate([kp_ref[0], ks_ref[0]], axis=0).astype(jnp.float32)
+    vcat = jnp.concatenate([vp_ref[0], vs_ref[0]], axis=0).astype(jnp.float32)
+
+    # --- dQ of block i (keys = prev ‖ self, forward mask) ---
+    s = jax.lax.dot_general(qs, kcat, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qi = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 1)
+    ok = (ki <= qi + w) & ((i > 0) | (ki >= w))
+    s = jnp.where(ok, s, NEG_INF)
+    p = p_from_lse(s, lses_ref[0][:, None])                # (w, 2w)
+    dp = jax.lax.dot_general(dos, vcat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - dels_ref[0][:, None]) * scale
+    dq_ref[0] = jax.lax.dot_general(ds, kcat, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32
+                                    ).astype(dq_ref.dtype)
+
+    # --- dK/dV of block i, self part (query block i, columns w:) ---
+    p_self = p[:, w:]
+    ds_self = ds[:, w:]
+    dv = jax.lax.dot_general(p_self, dos, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dk = jax.lax.dot_general(ds_self, qs, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # --- dK/dV of block i, next part (query block i+1 sees block i as its
+    #     fully-visible prev; zeroed for the last block where no next exists) ---
+    qn = qn_ref[0].astype(jnp.float32)
+    don = don_ref[0].astype(jnp.float32)
+    sn = jax.lax.dot_general(qn, ks, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32) * scale
+    # kill the clamped self-fetch at the last block in LOGIT space: its
+    # anti-causal logits can exceed lse, and exp-then-zero would give inf·0
+    sn = jnp.where(i < n_b - 1, sn, NEG_INF)
+    pn = p_from_lse(sn, lsen_ref[0][:, None])              # (w, w)
+    dv = dv + jax.lax.dot_general(pn, don, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    dpn = jax.lax.dot_general(don, vs, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    dsn = pn * (dpn - deln_ref[0][:, None]) * scale
+    dk = dk + jax.lax.dot_general(dsn, qn, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    dk_ref[0] = dk.astype(dk_ref.dtype)
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _fwd_call(q, k, v, *, window, interpret):
+    BH, N, D = q.shape
+    w = window
+    assert N % w == 0
+    self_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, i, 0))
+    prev_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
+    lse_blk = pl.BlockSpec((1, w), lambda b, i: (b, i))
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5), w=w),
+        grid=(BH, N // w),
+        in_specs=[self_blk, self_blk, self_blk, prev_blk, prev_blk],
+        out_specs=(self_blk, lse_blk),
+        out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+                   jax.ShapeDtypeStruct((BH, N), jnp.float32)),
+        interpret=interpret,
+    )(q, k, v, k, v)
+
+
+def _bwd_call(q, k, v, do, lse, delta, *, window, interpret):
+    BH, N, D = q.shape
+    w = window
+    n_b = N // w
+    self_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, i, 0))
+    prev_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
+    next_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.minimum(i + 1, n_b - 1), 0))
+    row_self = pl.BlockSpec((1, w), lambda b, i: (b, i))
+    row_next = pl.BlockSpec((1, w), lambda b, i: (b, jnp.minimum(i + 1, n_b - 1)))
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=1.0 / (D ** 0.5), w=w, n_b=n_b),
+        grid=(BH, n_b),
+        in_specs=[self_blk, next_blk,              # q self / next
+                  self_blk, prev_blk,              # k self / prev
+                  self_blk, prev_blk,              # v self / prev
+                  self_blk, next_blk,              # do self / next
+                  row_self, row_next,              # lse self / next
+                  row_self, row_next],             # delta self / next
+        out_specs=(self_blk, self_blk, self_blk),
+        out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+                   jax.ShapeDtypeStruct((BH, N, D), k.dtype),
+                   jax.ShapeDtypeStruct((BH, N, D), v.dtype)),
+        interpret=interpret,
+    )(q, q, k, k, v, v, do, do, lse, lse, delta, delta)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_vjp(window: int, interpret: bool):
+    kw = dict(window=window, interpret=interpret)
+
+    @jax.custom_vjp
+    def attend(q, k, v):
+        return _fwd_call(q, k, v, **kw)[0]
+
+    def attend_fwd(q, k, v):
+        o, lse = _fwd_call(q, k, v, **kw)
+        return o, (q, k, v, o, lse)
+
+    def attend_bwd(res, do):
+        q, k, v, o, lse = res
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+        return _bwd_call(q, k, v, do, lse, delta, **kw)
+
+    attend.defvjp(attend_fwd, attend_bwd)
+    return attend
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def local_window_kernel_call(q, k, v, *, window: int, interpret: bool | None = None):
-    """q,k,v: (BH, N, D).  Returns (BH, N, D)."""
-    BH, N, D = q.shape
-    w = window
-    assert N % w == 0
+    """q,k,v: (BH, N, D).  Returns (BH, N, D).  Differentiable in q, k, v."""
     if interpret is None:
         interpret = should_interpret()
-    grid = (BH, N // w)
-    self_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, i, 0))
-    prev_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
-    return pl.pallas_call(
-        functools.partial(_kernel, scale=1.0 / (D ** 0.5), w=w),
-        grid=grid,
-        in_specs=[self_blk, self_blk, self_blk, prev_blk, prev_blk],
-        out_specs=self_blk,
-        out_shape=jax.ShapeDtypeStruct((BH, N, D), q.dtype),
-        interpret=interpret,
-    )(q, k, v, k, v)
+    return _make_vjp(window, interpret)(q, k, v)

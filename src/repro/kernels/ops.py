@@ -2,6 +2,13 @@
 (B, N, H, D) and the kernels' flattened (B·H, N, D) / blocked layouts.
 
 These are the entry points ``repro.core`` uses when ``cfg.use_kernels``.
+
+All wrappers are differentiable in q/k/v: the kernel calls carry
+``jax.custom_vjp`` fused backward passes (see each kernel module), and the
+layout transforms here are plain jnp ops, so ``jax.grad`` through
+``bsa_attention`` / ``nsa_causal_attention`` works with ``use_kernels=True``.
+Mask-derived biases are non-differentiable by construction (their cotangent
+is dropped in the kernel VJPs).
 """
 
 from __future__ import annotations

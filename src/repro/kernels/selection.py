@@ -15,7 +15,15 @@ group.  The M (rows) dimension of every matmul is the whole query group
 ℓ=8 blocks — exactly the hardware-alignment rationale of NSA group fetch.
 
 Invalid selections are encoded as index −1: the index map clamps them to 0
-(a harmless fetch) and the kernel skips their accumulation via ``pl.when``.
+(a harmless fetch) and the kernel skips their accumulation via ``pl.when``
+(forward) or a multiplicative validity gate (backward).
+
+Differentiable: the forward emits per-row logsumexp; the backward kernel
+runs on the same scalar-prefetched grid, recomputes p = exp(s − lse) per
+selected block, accumulates dQ across a group's k* blocks in scratch, and
+writes per-selection dK/dV tiles to a (B, Hkv, G, k*, ℓ, D) staging buffer
+that the VJP wrapper scatter-adds back through the gathered block indices
+(duplicate selections of one block across groups sum correctly there).
 """
 
 from __future__ import annotations
@@ -27,14 +35,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG_INF, should_interpret
+from repro.kernels.common import (NEG_INF, lse_finalize, p_from_lse,
+                                  should_interpret)
 
 __all__ = ["selection_attention_kernel_call"]
 
 
-def _kernel(idx_ref,                     # scalar prefetch (B, Hkv, G, k*) int32
-            q_ref, k_ref, v_ref, tokbias_ref,
-            o_ref, m_scr, l_scr, acc_scr, *, scale: float, k_star: int):
+def _fwd_kernel(idx_ref,                 # scalar prefetch (B, Hkv, G, k*) int32
+                q_ref, k_ref, v_ref, tokbias_ref,
+                o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, k_star: int):
     b = pl.program_id(0)
     h = pl.program_id(1)
     g = pl.program_id(2)
@@ -75,6 +85,184 @@ def _kernel(idx_ref,                     # scalar prefetch (B, Hkv, G, k*) int32
         out = acc_scr[...] / denom
         out = jnp.where(l_scr[...] > 0.0, out, 0.0)        # all-invalid group → 0
         o_ref[0, 0, 0] = out.astype(o_ref.dtype)
+        m_safe = jnp.maximum(m_scr[...], NEG_INF / 2)
+        lse_ref[0, 0, 0] = lse_finalize(m_safe, l_scr[...])[:, 0]
+
+
+def _bwd_kernel(idx_ref,
+                q_ref, k_ref, v_ref, tokbias_ref, do_ref, lse_ref, delta_ref,
+                dq_ref, dkb_ref, dvb_ref, dq_scr, *,
+                scale: float, k_star: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    g = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    # Invalid selections fetched a clamped (harmless) block; kill them in
+    # LOGIT space (not by scaling p) so a clamped-block logit above the
+    # group's lse can't overflow exp() into inf·0 = NaN.  dkb/dvb tiles are
+    # still written — as exact zeros.
+    valid = idx_ref[b, h, g, j] >= 0
+    q = q_ref[0, 0, 0].astype(jnp.float32)                 # (M, D)
+    k = k_ref[0, 0, 0].astype(jnp.float32)                 # (ℓ, D)
+    v = v_ref[0, 0, 0].astype(jnp.float32)
+    do = do_ref[0, 0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = s + tokbias_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+    p = p_from_lse(s, lse_ref[0, 0, 0][:, None])           # (M, ℓ)
+    dvb_ref[0, 0, 0, 0] = jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(dvb_ref.dtype)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_ref[0, 0, 0][:, None]) * scale
+    dkb_ref[0, 0, 0, 0] = jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(dkb_ref.dtype)
+    dq_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    @pl.when(j == k_star - 1)
+    def _finalize():
+        dq_ref[0, 0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _fwd_call(q, kb, vb, idx, tok_bias, *, interpret):
+    B, Hkv, G, M, D = q.shape
+    ell = kb.shape[3]
+    k_star = idx.shape[-1]
+
+    def q_map(b, h, g, j, idx_ref):
+        return (b, h, g, 0, 0)
+
+    def kv_map(b, h, g, j, idx_ref):
+        return (b, h, jnp.maximum(idx_ref[b, h, g, j], 0), 0, 0)
+
+    def tok_map(b, h, g, j, idx_ref):
+        return (b, jnp.maximum(idx_ref[b, h, g, j], 0), 0)
+
+    def lse_map(b, h, g, j, idx_ref):
+        return (b, h, g, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, G, k_star),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, M, D), q_map),
+            pl.BlockSpec((1, 1, 1, ell, D), kv_map),
+            pl.BlockSpec((1, 1, 1, ell, D), kv_map),
+            pl.BlockSpec((1, 1, ell), tok_map),
+        ],
+        out_specs=(pl.BlockSpec((1, 1, 1, M, D), q_map),
+                   pl.BlockSpec((1, 1, 1, M), lse_map)),
+        scratch_shapes=[
+            pltpu.VMEM((M, 1), jnp.float32),
+            pltpu.VMEM((M, 1), jnp.float32),
+            pltpu.VMEM((M, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5), k_star=k_star),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((B, Hkv, G, M, D), q.dtype),
+                   jax.ShapeDtypeStruct((B, Hkv, G, M), jnp.float32)),
+        interpret=interpret,
+    )(idx, q, kb, vb, tok_bias)
+
+
+def _bwd_call(q, kb, vb, idx, tok_bias, do, lse, delta, *, interpret):
+    B, Hkv, G, M, D = q.shape
+    ell = kb.shape[3]
+    k_star = idx.shape[-1]
+
+    def q_map(b, h, g, j, idx_ref):
+        return (b, h, g, 0, 0)
+
+    def kv_map(b, h, g, j, idx_ref):
+        return (b, h, jnp.maximum(idx_ref[b, h, g, j], 0), 0, 0)
+
+    def tok_map(b, h, g, j, idx_ref):
+        return (b, jnp.maximum(idx_ref[b, h, g, j], 0), 0)
+
+    def row_map(b, h, g, j, idx_ref):
+        return (b, h, g, 0)
+
+    def sel_map(b, h, g, j, idx_ref):
+        return (b, h, g, j, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, G, k_star),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, M, D), q_map),
+            pl.BlockSpec((1, 1, 1, ell, D), kv_map),
+            pl.BlockSpec((1, 1, 1, ell, D), kv_map),
+            pl.BlockSpec((1, 1, ell), tok_map),
+            pl.BlockSpec((1, 1, 1, M, D), q_map),
+            pl.BlockSpec((1, 1, 1, M), row_map),
+            pl.BlockSpec((1, 1, 1, M), row_map),
+        ],
+        out_specs=(pl.BlockSpec((1, 1, 1, M, D), q_map),
+                   pl.BlockSpec((1, 1, 1, 1, ell, D), sel_map),
+                   pl.BlockSpec((1, 1, 1, 1, ell, D), sel_map)),
+        scratch_shapes=[pltpu.VMEM((M, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=1.0 / (D ** 0.5), k_star=k_star),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((B, Hkv, G, M, D), q.dtype),
+                   jax.ShapeDtypeStruct((B, Hkv, G, k_star, ell, D), kb.dtype),
+                   jax.ShapeDtypeStruct((B, Hkv, G, k_star, ell, D), vb.dtype)),
+        interpret=interpret,
+    )(idx, q, kb, vb, tok_bias, do, lse, delta)
+
+
+def _scatter_blocks(d_sel, idx, nb: int):
+    """Scatter-add per-selection tiles (B,Hkv,G,k*,ℓ,D) back to (B,Hkv,NB,ℓ,D).
+
+    Duplicate selections of one block (across groups) sum; invalid (−1)
+    selections were already zeroed by the backward kernel's validity gate but
+    are routed to block 0 with zero contribution anyway.
+    """
+    B, Hkv, G, k_star, ell, D = d_sel.shape
+    flat = d_sel.reshape(B, Hkv, G * k_star, ell, D)
+    tgt = jnp.maximum(idx.reshape(B, Hkv, G * k_star), 0)
+
+    def scat(buf, i, d):
+        return buf.at[i].add(d)
+
+    zeros = jnp.zeros((B, Hkv, nb, ell, D), d_sel.dtype)
+    return jax.vmap(jax.vmap(scat))(zeros, tgt, flat)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_vjp(interpret: bool):
+    @jax.custom_vjp
+    def attend(q, kb, vb, idx, tok_bias):
+        return _fwd_call(q, kb, vb, idx, tok_bias, interpret=interpret)[0]
+
+    def attend_fwd(q, kb, vb, idx, tok_bias):
+        o, lse = _fwd_call(q, kb, vb, idx, tok_bias, interpret=interpret)
+        return o, (q, kb, vb, idx, tok_bias, o, lse)
+
+    def attend_bwd(res, do):
+        q, kb, vb, idx, tok_bias, o, lse = res
+        delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+        dq, dkb_sel, dvb_sel = _bwd_call(q, kb, vb, idx, tok_bias, do, lse,
+                                         delta, interpret=interpret)
+        nb = kb.shape[2]
+        dkb = _scatter_blocks(dkb_sel, idx, nb)
+        dvb = _scatter_blocks(dvb_sel, idx, nb)
+        return dq, dkb, dvb, None, None                    # idx/bias: no grad
+
+    attend.defvjp(attend_fwd, attend_bwd)
+    return attend
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -87,43 +275,9 @@ def selection_attention_kernel_call(q, kb, vb, idx, tok_bias, *,
     idx:      (B, Hkv, G, k*) int32 selected block ids, −1 ⇒ invalid
     tok_bias: (B, NB, ℓ) fp32 additive key-padding bias (0 / NEG_INF)
     returns   (B, Hkv, G, M, D)
+
+    Differentiable in q, kb, vb.
     """
-    B, Hkv, G, M, D = q.shape
-    NB, ell = kb.shape[2], kb.shape[3]
-    k_star = idx.shape[-1]
     if interpret is None:
         interpret = should_interpret()
-
-    grid = (B, Hkv, G, k_star)
-
-    def q_map(b, h, g, j, idx_ref):
-        return (b, h, g, 0, 0)
-
-    def kv_map(b, h, g, j, idx_ref):
-        return (b, h, jnp.maximum(idx_ref[b, h, g, j], 0), 0, 0)
-
-    def tok_map(b, h, g, j, idx_ref):
-        return (b, jnp.maximum(idx_ref[b, h, g, j], 0), 0)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, M, D), q_map),
-            pl.BlockSpec((1, 1, 1, ell, D), kv_map),
-            pl.BlockSpec((1, 1, 1, ell, D), kv_map),
-            pl.BlockSpec((1, 1, ell), tok_map),
-        ],
-        out_specs=pl.BlockSpec((1, 1, 1, M, D), q_map),
-        scratch_shapes=[
-            pltpu.VMEM((M, 1), jnp.float32),
-            pltpu.VMEM((M, 1), jnp.float32),
-            pltpu.VMEM((M, D), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        functools.partial(_kernel, scale=1.0 / (D ** 0.5), k_star=k_star),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, M, D), q.dtype),
-        interpret=interpret,
-    )(idx, q, kb, vb, tok_bias)
+    return _make_vjp(interpret)(q, kb, vb, idx, tok_bias)

@@ -29,7 +29,6 @@ from repro.distributed.params import (
     cache_shardings,
     opt_shardings,
     param_shardings,
-    replicated,
 )
 from repro.distributed.sharding import axis_rules
 from repro.launch.hlo_analysis import analyze_hlo

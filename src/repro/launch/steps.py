@@ -5,7 +5,6 @@ These are THE functions the dry-run lowers and the trainer/server jit.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ from repro.core import (
     init_decode_cache,
     nsa_causal_attention,
     nsa_causal_decode,
-    nsa_init,
 )
 from repro.core.branches import repeat_kv, sdpa, mask_to_bias
 from repro.layers.nn import dense, dense_init

@@ -9,7 +9,6 @@ embeddings of dim ``d_frontend``.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

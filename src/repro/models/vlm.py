@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.layers.losses import masked_mean_nll
 from repro.layers.nn import dense, dense_init, embed
-from repro.models.transformer import lm_apply, lm_init, lm_loss
+from repro.models.transformer import lm_apply, lm_init
 
 
 def vlm_init(key, mcfg) -> dict:

@@ -14,7 +14,6 @@ against exact psum (quantization error bound + error-feedback convergence).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

@@ -1,11 +1,13 @@
 """Core BSA behaviour + property tests (hypothesis) on the system invariants."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e .[test]); skipping module")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

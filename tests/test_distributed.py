@@ -2,7 +2,6 @@
 pytest process keeps its single-device jax runtime (the device count is
 frozen at first backend init)."""
 
-import json
 import subprocess
 import sys
 import textwrap
@@ -13,6 +12,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import logical_to_spec
+from repro.launch.mesh import make_mesh
 
 
 def _run(src: str, n_dev: int = 8) -> str:
@@ -31,8 +31,7 @@ def _run(src: str, n_dev: int = 8) -> str:
 # ---------------------------------------------------------------------------
 
 def test_logical_to_spec_divisibility_guard():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}
@@ -46,8 +45,7 @@ def test_logical_to_spec_divisibility_guard():
 
 def test_param_shardings_patterns():
     from repro.distributed.params import param_shardings
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
 
     class M:
         shape = {"model": 1}

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.checkpoint import CheckpointManager, latest_step
+from repro.launch.mesh import make_mesh
 from repro.configs import get_config
 from repro.configs.reduce import SMOKE_SEQ, smoke_config
 from repro.data import ElasticityDataset, ShapeNetCarDataset, lm_batches
@@ -85,8 +86,7 @@ def test_checkpoint_reshard_on_restore(tmp_path):
     mgr = CheckpointManager(tmp_path, async_save=False)
     state = {"w": jnp.arange(16.0).reshape(4, 4)}
     mgr.save(5, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     got, _ = mgr.restore(jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state), shardings=sh)
