@@ -141,8 +141,14 @@ def time_kernel_train_step(args) -> None:
     CPU container kernels run under interpret mode (set
     REPRO_PALLAS_INTERPRET=0 on TPU hosts for compiled numbers).
 
+    With ``--batch B > 1`` the same step is ALSO timed as B sequential
+    single-sample calls (the pre-ragged-batching trainer pattern) and both
+    are reported as points/sec — the batched-path speedup measurement.
+    ``--ragged`` packs a mixed-size batch (per-sample masks) instead of a
+    dense one, matching the variable-size geometry pipeline.
+
       PYTHONPATH=src python -m benchmarks.perf_iter --kernel-step \
-          --n 256 --batch 1 --heads 4 --kv-heads 2 --head-dim 32
+          --n 256 --batch 8 --heads 4 --kv-heads 2 --head-dim 32 --ragged
     """
     import jax
     import jax.numpy as jnp
@@ -163,22 +169,58 @@ def time_kernel_train_step(args) -> None:
     q = jax.random.normal(ks[0], (B, N, Hq, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, N, Hkv, D), jnp.float32)
     v = jax.random.normal(ks[2], (B, N, Hkv, D), jnp.float32)
+    if args.ragged:
+        # mixed-size batch: sample i keeps a decreasing prefix of real tokens
+        lens = [N - (i * (N // 2) // max(B - 1, 1)) for i in range(B)]
+        mask = jnp.stack([jnp.arange(N) < n for n in lens])
+        n_pts = sum(lens)
+    else:
+        mask = None
+        n_pts = B * N
     params = bsa_init(ks[3], cfg, n_heads=Hq, n_kv_heads=Hkv, head_dim=D,
                       d_model=Hq * D)
 
-    def loss(p, q, k, v):
-        return jnp.sum(bsa_attention(p, q, k, v, cfg=cfg) ** 2)
+    def loss(p, q, k, v, m):
+        return jnp.sum(bsa_attention(p, q, k, v, cfg=cfg, mask=m) ** 2)
 
     step = jax.jit(jax.value_and_grad(loss))
 
-    def run(p, q, k, v):
-        out, grads = step(p, q, k, v)
+    def run(p, q, k, v, m):
+        out, grads = step(p, q, k, v, m)
         return out
 
-    us = time_fn(run, params, q, k, v, warmup=1, iters=3)
+    us = time_fn(run, params, q, k, v, mask, warmup=2, iters=5)
     mode = "interpret" if should_interpret() else "compiled"
-    emit(f"perf_iter/kernel_train_step_b{B}_n{N}", us,
-         f"mode={mode};heads={Hq}/{Hkv};d={D}")
+    pps = n_pts / (us / 1e6)
+    tag = "_ragged" if args.ragged else ""      # distinct trajectory entries
+    emit(f"perf_iter/kernel_train_step_b{B}_n{N}{tag}", us,
+         f"mode={mode};heads={Hq}/{Hkv};d={D};points_per_sec={pps:.0f}")
+
+    if B > 1:
+        # baseline: the SAME work as B sequential single-sample steps — the
+        # pre-ragged-batching trainer pattern.  A per-sample loop must also
+        # sum the per-sample losses and ACCUMULATE gradients across samples
+        # (the batched step gets both for free from one backward).
+        qs = [q[i:i + 1] for i in range(B)]
+        ks_ = [k[i:i + 1] for i in range(B)]
+        vs = [v[i:i + 1] for i in range(B)]
+        ms = [mask[i:i + 1] if mask is not None else None for i in range(B)]
+
+        def run_seq(p):
+            total, acc = None, None
+            for i in range(B):
+                li, gi = step(p, qs[i], ks_[i], vs[i], ms[i])
+                total = li if total is None else total + li
+                acc = gi if acc is None else jax.tree.map(jnp.add, acc, gi)
+            return total, acc
+
+        us_seq = time_fn(run_seq, params, warmup=2, iters=5)
+        pps_seq = n_pts / (us_seq / 1e6)
+        emit(f"perf_iter/kernel_train_step_seq{B}_n{N}{tag}", us_seq,
+             f"mode={mode};points_per_sec={pps_seq:.0f}")
+        print(f"# batched step vs {B} sequential steps: "
+              f"{us_seq / us:.2f}x points/sec "
+              f"({pps:.0f} vs {pps_seq:.0f})", flush=True)
 
 
 def main():
@@ -194,7 +236,11 @@ def main():
     ap.add_argument("--fsdp", action="store_true")
     ap.add_argument("--tag", default="")
     ap.add_argument("--kernel-step", action="store_true",
-                    help="time one executed fwd+bwd BSA step on the kernel path")
+                    help="time one executed fwd+bwd BSA step on the kernel path "
+                         "(--batch B>1 also times B sequential single-sample "
+                         "steps for the batched-path comparison)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="kernel-step: mixed-size batch with per-sample masks")
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--heads", type=int, default=4)

@@ -5,6 +5,12 @@ ShapeNet-Car airflow-pressure task — checkpointing, watchdog and all.
 
 Any Table-3 variant works: shapenet-bsa | shapenet-bsa-no-group |
 shapenet-bsa-group-cmp | shapenet-full | shapenet-erwin.
+
+Variable-size geometries: ``--var-points LO HI`` draws every car's point
+count from [LO, HI].  The dataset packs the ragged samples into one padded
+batch with per-sample masks (pad_to frozen at the range maximum), so the
+whole mixed-size batch still runs as ONE jitted train step — no per-sample
+Python loop, no shape-churn recompilation.
 """
 
 import argparse
@@ -16,11 +22,12 @@ from repro.models.api import model_api
 from repro.runtime import Trainer, TrainerConfig
 
 
-def evaluate(api, params, ds, n_batches=8, batch_size=8):
+def evaluate(api, params, ds, n_batches=8, batch_size=8, pad_to=None):
     mse, n = 0.0, 0
     import jax, jax.numpy as jnp
     fwd = jax.jit(api.forward)
-    for i, batch in enumerate(ds.batches(batch_size, shuffle=False, epochs=1)):
+    for i, batch in enumerate(ds.batches(batch_size, shuffle=False, epochs=1,
+                                         pad_to=pad_to)):
         if i >= n_batches:
             break
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
@@ -41,6 +48,10 @@ def main():
     ap.add_argument("--use-kernels", action="store_true",
                     help="train through the fused Pallas kernels (the custom-VJP "
                          "backward path; interpret mode on CPU, compiled on TPU)")
+    ap.add_argument("--var-points", type=int, nargs=2, metavar=("LO", "HI"),
+                    default=None,
+                    help="ragged geometries: per-sample point counts drawn from "
+                         "[LO, HI]; batches are packed + masked (batched path)")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch)
@@ -50,15 +61,19 @@ def main():
         import dataclasses
         mcfg = mcfg.scaled(bsa=dataclasses.replace(mcfg.bsa, use_kernels=True))
     api = model_api(mcfg)
-    train_ds = ShapeNetCarDataset("train")
-    test_ds = ShapeNetCarDataset("test")
+    nrange = tuple(args.var_points) if args.var_points else None
+    train_ds = ShapeNetCarDataset("train", n_points_range=nrange)
+    test_ds = ShapeNetCarDataset("test", n_points_range=nrange)
+    # freeze the packed length so every mixed-size batch hits ONE compiled step
+    pad_to = train_ds.max_padded_len if nrange else None
 
     cfg = TrainerConfig(base_lr=1e-3, weight_decay=0.01,       # paper App. A
                         total_steps=args.steps, warmup_steps=min(50, args.steps // 10),
                         ckpt_dir=args.ckpt, log_every=20)
     tr = Trainer(api, cfg)
-    params, _ = tr.fit(train_ds.batches(args.batch, seed=0), steps=args.steps)
-    mse = evaluate(api, params, test_ds)
+    params, _ = tr.fit(train_ds.batches(args.batch, seed=0, pad_to=pad_to),
+                       steps=args.steps)
+    mse = evaluate(api, params, test_ds, pad_to=pad_to)
     print(f"\n[{args.arch}] test MSE after {args.steps} steps: {mse:.4f}")
     print(f"wall time {tr.wall_time:.1f}s, stragglers: {len(tr.watchdog.straggler_events)}")
 

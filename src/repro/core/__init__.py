@@ -1,4 +1,30 @@
-"""Ball Sparse Attention — the paper's primary contribution."""
+"""Ball Sparse Attention — the paper's primary contribution.
+
+Public API and shape conventions (see docs/architecture.md for the full
+map from paper sections to modules):
+
+  * :class:`BSAConfig` — all paper hyperparameters (ball size m, compression
+    block ℓ, top-k k*, group size g, gating mode) plus implementation knobs
+    (``use_kernels``, ``jnp_chunk_tokens``).
+  * :func:`bsa_attention` / :func:`bsa_init` — non-causal BSA on ball-ordered
+    point sequences.  q: (B, N, Hq, D); k, v: (B, N, Hkv, D) with
+    Hq = Hkv·rep (GQA); ``mask``: (B, N) bool, True = real token — one row
+    per sample of a packed ragged batch.  Padded KEYS are invisible (masked
+    in logit space everywhere, Pallas kernels included); padded QUERY rows
+    are computed but zeroed in the output, so a packed batch of mixed-size
+    clouds equals running each cloud alone (tests/test_batching.py).
+  * :func:`nsa_causal_attention` / :func:`nsa_init` — the causal 1-D variant
+    (LM backend), same shapes and mask semantics; plus
+    :func:`init_decode_cache` / :func:`nsa_causal_decode` for incremental
+    decoding.
+  * :func:`full_attention`, :func:`erwin_attention` — the paper's baselines.
+  * Ragged-batching helpers (re-exported from ``repro.core.balltree``):
+    ``build_balltree_permutation(s)`` for host-side ball ordering,
+    ``pack_ragged`` / ``unpack_ragged`` to move between variable-size clouds
+    and one fixed-shape masked batch, ``bucket_length`` for the geometric
+    padding buckets, and ``ragged_ball_order`` for the whole
+    order-pack-in-one-call convenience.
+"""
 
 from repro.core.config import BSAConfig  # noqa: F401
 from repro.core.bsa import bsa_init, bsa_attention, ball_attention_ref  # noqa: F401
@@ -10,3 +36,13 @@ from repro.core.nsa_causal import (  # noqa: F401
 )
 from repro.core.full_attention import full_attention  # noqa: F401
 from repro.core.erwin import erwin_attention  # noqa: F401
+from repro.core.balltree import (  # noqa: F401
+    ball_order,
+    bucket_length,
+    build_balltree_permutation,
+    build_balltree_permutations,
+    pack_ragged,
+    pad_to_multiple,
+    ragged_ball_order,
+    unpack_ragged,
+)

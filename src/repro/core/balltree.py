@@ -18,8 +18,14 @@ import numpy as np
 
 __all__ = [
     "build_balltree_permutation",
+    "build_balltree_permutations",
     "ball_order",
+    "ragged_ball_order",
     "pad_to_multiple",
+    "bucket_length",
+    "pack_ragged",
+    "pack_items",
+    "unpack_ragged",
     "ball_ids",
 ]
 
@@ -90,3 +96,106 @@ def pad_to_multiple(x: np.ndarray, multiple: int, axis: int = 0, value: float = 
 def ball_ids(seq_len: int, ball_size: int) -> np.ndarray:
     """ball id per position for a ball-ordered sequence of ``seq_len``."""
     return np.arange(seq_len) // ball_size
+
+
+# ---------------------------------------------------------------------------
+# Ragged batching: variable-size point clouds → one packed (B, L, ...) batch
+#
+# The model (and the Pallas kernels) consume fixed-shape batches with a
+# per-sample validity mask (True = real token).  Variable-size geometries are
+# handled entirely here on the host: each cloud is ball-ordered with its OWN
+# tree, padded to a shared bucket length, and stacked.  Bucket lengths are
+# quantised (geometric in ball counts) so the number of distinct jit shapes
+# stays logarithmic in the size range.
+# ---------------------------------------------------------------------------
+
+def build_balltree_permutations(points_list, ball_size: int) -> list[np.ndarray]:
+    """Ball-tree permutation for each cloud in a ragged batch.
+
+    ``points_list``: sequence of (n_i, D) arrays (n_i may differ per sample).
+    Returns a list of per-sample permutations; each tree is built
+    independently, so balls never straddle two samples."""
+    return [build_balltree_permutation(p, ball_size) for p in points_list]
+
+
+def bucket_length(n: int, multiple: int, *, geometric: bool = True) -> int:
+    """Padded length for an ``n``-point cloud.
+
+    Always a multiple of ``multiple`` (the ball size).  With
+    ``geometric=True`` (default) the ball COUNT is additionally rounded up to
+    a power of two, so clouds of any size map onto O(log range) distinct
+    shapes — one jit compilation per bucket instead of per size.
+    """
+    if n < 1:
+        raise ValueError(f"need at least one point, got n={n}")
+    balls = -(-n // multiple)
+    if geometric:
+        balls = 1 << (balls - 1).bit_length()
+    return balls * multiple
+
+
+def pack_ragged(arrays, multiple: int, *, pad_to: int | None = None,
+                value: float = 0.0, geometric: bool = False):
+    """Stack variable-length arrays into one padded batch.
+
+    ``arrays``: sequence of (n_i, ...) numpy arrays sharing trailing dims.
+    Each is padded along axis 0 to a common length L — ``pad_to`` if given
+    (must already be ≥ every n_i and a multiple of ``multiple``), else
+    ``bucket_length(max n_i)``.  Returns ``(batch (B, L, ...), mask (B, L))``
+    with mask True on real rows.  The inverse is :func:`unpack_ragged`.
+    """
+    arrays = [np.asarray(a) for a in arrays]
+    if not arrays:
+        raise ValueError("pack_ragged needs at least one array")
+    lengths = [a.shape[0] for a in arrays]
+    if pad_to is None:
+        target = bucket_length(max(lengths), multiple, geometric=geometric)
+    else:
+        if pad_to % multiple or pad_to < max(lengths):
+            raise ValueError(f"pad_to={pad_to} must be a multiple of "
+                             f"{multiple} and ≥ max sample size {max(lengths)}")
+        target = pad_to
+    batch = np.full((len(arrays), target) + arrays[0].shape[1:], value,
+                    dtype=arrays[0].dtype)
+    mask = np.zeros((len(arrays), target), dtype=bool)
+    for i, (a, n) in enumerate(zip(arrays, lengths)):
+        batch[i, :n] = a
+        mask[i, :n] = True
+    return batch, mask
+
+
+def unpack_ragged(batch: np.ndarray, mask: np.ndarray) -> list[np.ndarray]:
+    """Inverse of :func:`pack_ragged`: split a padded batch back into the
+    per-sample arrays (padding rows dropped).  Assumes masks are prefix-true
+    (real rows first), which is what pack_ragged produces."""
+    batch = np.asarray(batch)
+    mask = np.asarray(mask)
+    return [batch[i, : int(mask[i].sum())] for i in range(batch.shape[0])]
+
+
+def pack_items(items: list[dict], pad_to: int | None) -> dict:
+    """Stack per-sample dicts of (padded) arrays into one packed batch dict.
+
+    The dataset-side counterpart of :func:`pack_ragged`: each item maps field
+    name → (L_i, ...) array (already ball-multiple length, with a ``feats``
+    entry and a bool ``mask``).  All fields re-pad to ``pad_to`` (or the
+    batch max); padding rows carry mask=False / zero features, which the
+    attention mask semantics treat as invisible keys."""
+    target = pad_to or max(it["feats"].shape[0] for it in items)
+    return {k: pack_ragged([it[k] for it in items], 1, pad_to=target)[0]
+            for k in items[0]}
+
+
+def ragged_ball_order(points_list, features_list, ball_size: int, *,
+                      pad_to: int | None = None, geometric: bool = True):
+    """Batched convenience: ball-order and pack a ragged geometry batch.
+
+    Returns ``(points (B,L,D), feats (B,L,F), mask (B,L), perms)`` where
+    ``perms`` are the per-sample permutations (needed to map predictions on
+    the packed layout back to each cloud's original point order)."""
+    perms = build_balltree_permutations(points_list, ball_size)
+    pts = [np.asarray(p)[perm] for p, perm in zip(points_list, perms)]
+    fts = [np.asarray(f)[perm] for f, perm in zip(features_list, perms)]
+    pts_b, mask = pack_ragged(pts, ball_size, pad_to=pad_to, geometric=geometric)
+    fts_b, _ = pack_ragged(fts, ball_size, pad_to=pad_to, geometric=geometric)
+    return pts_b, fts_b, mask, perms

@@ -236,6 +236,10 @@ def bsa_attention(params: dict, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """Ball Sparse Attention (paper Eq. 9).
 
     q: (B, N, Hq, D); k, v: (B, N, Hkv, D); mask: (B, N) bool (True = real).
+    Each batch row is an independent (ball-ordered) sample; with per-row
+    masks a packed batch of MIXED-SIZE clouds (``core.balltree.pack_ragged``)
+    equals running every cloud alone — padded keys are masked in logit space
+    on every branch (kernels included), padded query rows are zeroed here.
     ``x`` is the pre-projection layer input, needed only for token gating.
     Returns (B, N, Hq, D) [+ aux dict].
     """

@@ -70,12 +70,14 @@ def nsa_init(key, cfg: BSAConfig, *, n_heads: int, n_kv_heads: int, head_dim: in
 # Local branch — blocked causal window
 # ---------------------------------------------------------------------------
 
-def local_window_attention_ref(q, k, v, window: int, chunk_blocks: int = 0):
+def local_window_attention_ref(q, k, v, window: int, mask=None,
+                               chunk_blocks: int = 0):
     """Blocked local causal attention (pure-jnp reference).
 
     q,k,v: (B, N, H, D) with equal head counts.  Query block i attends to
-    block i (causal) and block i-1 (full).  ``chunk_blocks`` > 0 bounds temp
-    memory via lax.map tiles over blocks."""
+    block i (causal) and block i-1 (full).  ``mask``: (B, N) bool key
+    validity (True = real token) for packed ragged batches, or None.
+    ``chunk_blocks`` > 0 bounds temp memory via lax.map tiles over blocks."""
     B, N, H, D = q.shape
     w = window
     assert N % w == 0, f"N={N} not a multiple of local window {w}"
@@ -96,6 +98,11 @@ def local_window_attention_ref(q, k, v, window: int, chunk_blocks: int = 0):
     bias_first = mask_to_bias(first)
     biases = jnp.where((jnp.arange(nb) == 0)[:, None, None], bias_first[None], bias[None])
     biases = biases[None, :, None]                                  # (1,nb,1,w,2w)
+    if mask is not None:
+        mb = mask.reshape(B, nb, w)
+        mprev = jnp.concatenate([jnp.ones_like(mb[:, :1]), mb[:, :-1]], axis=1)
+        mcat = jnp.concatenate([mprev, mb], axis=2)                 # (B,nb,2w)
+        biases = biases + mask_to_bias(mcat[:, :, None, None, :])
 
     if chunk_blocks and nb % chunk_blocks == 0 and nb > chunk_blocks:
         nc = nb // chunk_blocks
@@ -110,15 +117,16 @@ def local_window_attention_ref(q, k, v, window: int, chunk_blocks: int = 0):
     return out.transpose(0, 1, 3, 2, 4).reshape(B, N, H, D)
 
 
-def _local_branch(q, k, v, cfg: BSAConfig):
+def _local_branch(q, k, v, mask, cfg: BSAConfig):
     rep = q.shape[2] // k.shape[2]
     kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
     if cfg.use_kernels:
         from repro.kernels import ops as kops
-        return kops.local_window_attention(q, kf, vf, cfg.effective_local_window)
+        return kops.local_window_attention(q, kf, vf, cfg.effective_local_window,
+                                           mask=mask)
     w = cfg.effective_local_window
     cb = max(cfg.jnp_chunk_tokens // w, 1) if cfg.jnp_chunk_tokens else 0
-    return local_window_attention_ref(q, kf, vf, w, chunk_blocks=cb)
+    return local_window_attention_ref(q, kf, vf, w, mask=mask, chunk_blocks=cb)
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +144,7 @@ def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
     ell = cfg.cmp_block
     nb = N // ell
 
-    out_local = _local_branch(q, k, v, cfg)
+    out_local = _local_branch(q, k, v, mask, cfg)
 
     # --- compression ---
     k_cmp = phi_apply(params["phi_k"], k, mask, cfg)                # (B,NB,Hkv,D)

@@ -1,30 +1,49 @@
 """Synthetic Elasticity benchmark proxy (Li et al. 2021): 972-point meshes of
 a plate with a random void, stress field regression.  Same sizes as the
-paper's Table 2 setting (seq len 972 → padded to 1024 = 4 balls of 256)."""
+paper's Table 2 setting (seq len 972 → padded to 1024 = 4 balls of 256).
+
+Supports the same ragged-batching contract as ``data/shapenet.py``:
+``n_points_range=(lo, hi)`` gives every mesh its own point count and
+``batches()`` packs mixed-size meshes into one padded batch + mask.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.balltree import build_balltree_permutation, pad_to_multiple
+from repro.core.balltree import (bucket_length, build_balltree_permutation,
+                                 pack_items, pad_to_multiple)
 
 N_POINTS = 972
 
 
 class ElasticityDataset:
-    def __init__(self, split="train", ball_size: int = 256, seed: int = 77):
+    def __init__(self, split="train", ball_size: int = 256, seed: int = 77,
+                 n_points: int = N_POINTS,
+                 n_points_range: tuple[int, int] | None = None):
         self.length = 1000 if split == "train" else 200
         self.offset = 0 if split == "train" else 1000
         self.ball_size = ball_size
         self.seed = seed
+        self.n_points = n_points
+        self.n_points_range = n_points_range
 
     def __len__(self):
         return self.length
 
+    @property
+    def max_padded_len(self) -> int:
+        """Static batch length for ``batches(pad_to=...)`` (see shapenet)."""
+        hi = self.n_points_range[1] if self.n_points_range else self.n_points
+        return bucket_length(hi, self.ball_size, geometric=False)
+
     def __getitem__(self, i: int) -> dict:
         rng = np.random.default_rng(self.seed + self.offset + i)
         # unit plate with an elliptic void; points on a jittered grid
-        n = N_POINTS
+        if self.n_points_range is None:
+            n = self.n_points
+        else:
+            n = int(rng.integers(self.n_points_range[0], self.n_points_range[1] + 1))
         pts = rng.uniform(0, 1, (int(n * 1.6), 2)).astype(np.float32)
         cx, cy = rng.uniform(0.3, 0.7, 2)
         rx, ry = rng.uniform(0.08, 0.22, 2)
@@ -49,12 +68,14 @@ class ElasticityDataset:
         stress, _ = pad_to_multiple(stress, self.ball_size)
         return {"feats": feats, "target": stress, "mask": mask}
 
-    def batches(self, batch_size: int, *, shuffle=True, seed=0, epochs=None):
+    def batches(self, batch_size: int, *, shuffle=True, seed=0, epochs=None,
+                pad_to: int | None = None):
+        """Yield packed {feats, target, mask} batches (ragged-safe)."""
         rng = np.random.default_rng(seed)
         epoch = 0
         while epochs is None or epoch < epochs:
             order = rng.permutation(self.length) if shuffle else np.arange(self.length)
             for s in range(0, self.length - batch_size + 1, batch_size):
                 items = [self[int(j)] for j in order[s:s + batch_size]]
-                yield {k: np.stack([it[k] for it in items]) for k in items[0]}
+                yield pack_items(items, pad_to)
             epoch += 1

@@ -10,13 +10,20 @@ turbulent wake noise behind the rear axle.  Same split: 700 train / 189 test.
 
 Every sample is ball-tree ordered (core.balltree) and padded to a multiple
 of the ball size; features = [xyz, n̂, 1] (in_dim=7).
+
+Variable-size geometries: with ``n_points_range=(lo, hi)`` every sample draws
+its own point count (deterministic per index), and ``batches()`` packs the
+ragged samples into one padded batch with a per-sample validity mask —
+the end-to-end input contract of the batched BSA path (see
+docs/architecture.md, "Ragged batching").
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.balltree import build_balltree_permutation, pad_to_multiple
+from repro.core.balltree import (bucket_length, build_balltree_permutation,
+                                 pack_items, pad_to_multiple)
 
 N_POINTS = 3586
 N_TRAIN, N_TEST = 700, 189
@@ -100,15 +107,24 @@ def _pressure(pts: np.ndarray, nrm: np.ndarray, rng) -> np.ndarray:
 
 class ShapeNetCarDataset:
     """Deterministic synthetic clone.  ``__getitem__`` → dict ready for the
-    model: ball-ordered, padded features (N,7), target (N,1), mask (N,)."""
+    model: ball-ordered, padded features (N,7), target (N,1), mask (N,).
+
+    ``n_points_range=(lo, hi)`` turns on variable-size clouds: sample i draws
+    a point count in [lo, hi] from its own deterministic rng, so the set is
+    reproducible but ragged.  ``batches()`` then pads every sample of a batch
+    to one shared length (``pad_to`` or the batch max rounded to the ball
+    size) with per-sample masks — a packed batch the jitted step consumes
+    whole."""
 
     def __init__(self, split: str = "train", ball_size: int = 256,
                  n_points: int = N_POINTS, seed: int = 1234,
-                 normalize: bool = True):
+                 normalize: bool = True,
+                 n_points_range: tuple[int, int] | None = None):
         assert split in ("train", "test")
         self.split = split
         self.ball_size = ball_size
         self.n_points = n_points
+        self.n_points_range = n_points_range
         self.seed = seed
         self.offset = 0 if split == "train" else N_TRAIN
         self.length = N_TRAIN if split == "train" else N_TEST
@@ -117,9 +133,22 @@ class ShapeNetCarDataset:
     def __len__(self):
         return self.length
 
+    @property
+    def max_padded_len(self) -> int:
+        """Upper bound on any sample's padded length — pass as ``pad_to`` to
+        ``batches()`` to freeze the batch shape (single jit compilation)."""
+        hi = self.n_points_range[1] if self.n_points_range else self.n_points
+        return bucket_length(hi, self.ball_size, geometric=False)
+
+    def _sample_n(self, rng: np.random.Generator) -> int:
+        if self.n_points_range is None:
+            return self.n_points
+        lo, hi = self.n_points_range
+        return int(rng.integers(lo, hi + 1))
+
     def __getitem__(self, i: int) -> dict:
         rng = np.random.default_rng(self.seed + self.offset + i)
-        pts = _make_car(rng, self.n_points)
+        pts = _make_car(rng, self._sample_n(rng))
         nrm = _normals(pts)
         p = _pressure(pts, nrm, rng)
         if self.normalize:
@@ -131,12 +160,17 @@ class ShapeNetCarDataset:
         p, _ = pad_to_multiple(p, self.ball_size)
         return {"feats": feats, "target": p, "mask": mask}
 
-    def batches(self, batch_size: int, *, shuffle=True, seed=0, epochs=None):
+    def batches(self, batch_size: int, *, shuffle=True, seed=0, epochs=None,
+                pad_to: int | None = None):
+        """Yield packed batches {feats (B,L,7), target (B,L,1), mask (B,L)}.
+
+        L is ``pad_to`` if given (static shapes → one jit compilation), else
+        the largest sample length in the batch (already a ball multiple)."""
         rng = np.random.default_rng(seed)
         epoch = 0
         while epochs is None or epoch < epochs:
             order = rng.permutation(self.length) if shuffle else np.arange(self.length)
             for s in range(0, self.length - batch_size + 1, batch_size):
                 items = [self[int(j)] for j in order[s:s + batch_size]]
-                yield {k: np.stack([it[k] for it in items]) for k in items[0]}
+                yield pack_items(items, pad_to)
             epoch += 1

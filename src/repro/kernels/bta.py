@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import (NEG_INF, lse_finalize, p_from_lse,
-                                  should_interpret)
+from repro.kernels.common import (NEG_INF, interpret_batch_map, lse_finalize,
+                                  p_from_lse, should_interpret)
 
 __all__ = ["ball_attention_kernel_call"]
 
@@ -140,4 +140,9 @@ def ball_attention_kernel_call(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     additive (0 / NEG_INF).  Returns (BH, N, D).  Differentiable in q, k, v."""
     if interpret is None:
         interpret = should_interpret()
+    if interpret and q.shape[0] > 1:
+        # CPU fallback: per-slice grids keep the interpreter linear in B·H
+        bias_bh = jnp.repeat(key_bias, n_heads, axis=0)
+        return interpret_batch_map(_make_vjp(ball_size, 1, True),
+                                   q, k, v, bias_bh)
     return _make_vjp(ball_size, n_heads, interpret)(q, k, v, key_bias)

@@ -47,3 +47,15 @@ def p_from_lse(s, lse):
     """Recompute normalised attention probabilities from logits + residual."""
     p = jnp.exp(s - lse)
     return jnp.where(s <= NEG_INF / 2, 0.0, p)
+
+
+def interpret_batch_map(fn, *args):
+    """Sequential ``lax.map`` of a kernel call over leading-dim slices.
+
+    INTERPRET-MODE ONLY.  The Pallas interpreter's per-grid-cell cost grows
+    with the TOTAL operand size, so a batched grid costs O(B²) on CPU —
+    mapping per-sample slices keeps it linear while staying one jitted
+    computation (and differentiable: scan-of-custom_vjp).  Compiled TPU runs
+    never take this path; there the batched grid is the whole point.
+    """
+    return jax.lax.map(lambda t: fn(*[a[None] for a in t])[0], args)

@@ -31,8 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import (NEG_INF, lse_finalize, p_from_lse,
-                                  should_interpret)
+from repro.kernels.common import (NEG_INF, interpret_batch_map, lse_finalize,
+                                  p_from_lse, should_interpret)
 
 __all__ = ["flash_attention_kernel_call"]
 
@@ -291,5 +291,11 @@ def flash_attention_kernel_call(q, k, v, key_bias, *, n_heads: int,
     tk = _pick_tile(L, tk)
     if interpret is None:
         interpret = should_interpret()
+    if interpret and BH > 1:
+        # CPU fallback: per-slice grids keep the interpreter linear in B·H
+        bias_bh = jnp.repeat(key_bias, n_heads, axis=0)
+        return interpret_batch_map(
+            _make_vjp(1, tq, tk, causal, block_causal, ell, True),
+            q, k, v, bias_bh)
     return _make_vjp(n_heads, tq, tk, causal, block_causal, ell, interpret)(
         q, k, v, key_bias)

@@ -5,13 +5,20 @@ the TPU-aligned blocked equivalent of a sliding window.  The previous block
 is fetched by passing K (and V) twice with two index maps (self / prev),
 so one grid step holds a (w, D) query tile and a (2w, D) key tile in VMEM.
 
+Key-validity masking for ragged batches rides the same fetch pattern: the
+per-token additive bias row (B, N) fp32 (0 valid / NEG_INF padding) is
+passed twice with the self / prev index maps and added in LOGIT space before
+the softmax — identical semantics to the bta/flash kernels, so a packed
+batch of mixed-size sequences is one grid launch.
+
 Differentiable: forward also emits per-row logsumexp.  The backward is a
 single-pass per-block kernel — dQ of block i needs K/V of blocks {i−1, i}
 (already the forward fetch pattern), while dK/dV of block i get
 contributions from query blocks {i, i+1}; the NEXT query block (with its
 dO/lse/delta rows) is fetched via a second set of index maps, so each grid
 cell owns its output blocks outright and no cross-cell accumulation is
-needed.
+needed.  The key bias enters the recomputed logits of both contributions,
+so masked keys get exactly zero gradient.
 """
 
 from __future__ import annotations
@@ -22,20 +29,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import (NEG_INF, lse_finalize, p_from_lse,
-                                  should_interpret)
+from repro.kernels.common import (NEG_INF, interpret_batch_map, lse_finalize,
+                                  p_from_lse, should_interpret)
 
 __all__ = ["local_window_kernel_call"]
 
 
-def _fwd_kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, o_ref, lse_ref, *,
-                scale: float, w: int):
+def _fwd_kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, bs_ref, bp_ref,
+                o_ref, lse_ref, *, scale: float, w: int):
     i = pl.program_id(1)
     q = q_ref[0].astype(jnp.float32)                       # (w, D)
     k = jnp.concatenate([kp_ref[0], ks_ref[0]], axis=0).astype(jnp.float32)  # (2w, D)
     v = jnp.concatenate([vp_ref[0], vs_ref[0]], axis=0)
+    bias = jnp.concatenate([bp_ref[0], bs_ref[0]], axis=0)  # (2w,) key validity
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
+    s = s + bias
     qi = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 0)
     ki = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 1)
     ok = ki <= qi + w                                      # prev full + self causal
@@ -52,7 +61,7 @@ def _fwd_kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, o_ref, lse_ref, *,
     lse_ref[0] = lse_finalize(mx, l)[:, 0]
 
 
-def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref,
+def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref, bs_ref, bp_ref,
                 dos_ref, don_ref, lses_ref, lsen_ref, dels_ref, deln_ref,
                 dq_ref, dk_ref, dv_ref, *, scale: float, w: int, n_b: int):
     i = pl.program_id(1)
@@ -62,10 +71,12 @@ def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref,
     dos = dos_ref[0].astype(jnp.float32)
     kcat = jnp.concatenate([kp_ref[0], ks_ref[0]], axis=0).astype(jnp.float32)
     vcat = jnp.concatenate([vp_ref[0], vs_ref[0]], axis=0).astype(jnp.float32)
+    bcat = jnp.concatenate([bp_ref[0], bs_ref[0]], axis=0)  # (2w,)
 
-    # --- dQ of block i (keys = prev ‖ self, forward mask) ---
+    # --- dQ of block i (keys = prev ‖ self, forward mask + key bias) ---
     s = jax.lax.dot_general(qs, kcat, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
+    s = s + bcat
     qi = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 0)
     ki = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 1)
     ok = (ki <= qi + w) & ((i > 0) | (ki >= w))
@@ -92,6 +103,7 @@ def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref,
     don = don_ref[0].astype(jnp.float32)
     sn = jax.lax.dot_general(qn, ks, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32) * scale
+    sn = sn + bs_ref[0]
     # kill the clamped self-fetch at the last block in LOGIT space: its
     # anti-causal logits can exceed lse, and exp-then-zero would give inf·0
     sn = jnp.where(i < n_b - 1, sn, NEG_INF)
@@ -107,31 +119,38 @@ def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref,
     dv_ref[0] = dv.astype(dv_ref.dtype)
 
 
-def _fwd_call(q, k, v, *, window, interpret):
+def _fwd_call(q, k, v, key_bias, *, window, n_heads, interpret):
     BH, N, D = q.shape
     w = window
+    H = n_heads
     assert N % w == 0
     self_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, i, 0))
     prev_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
+    bias_self = pl.BlockSpec((1, w), lambda b, i: (b // H, i))
+    bias_prev = pl.BlockSpec((1, w), lambda b, i: (b // H, jnp.maximum(i - 1, 0)))
     lse_blk = pl.BlockSpec((1, w), lambda b, i: (b, i))
     return pl.pallas_call(
         functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5), w=w),
         grid=(BH, N // w),
-        in_specs=[self_blk, self_blk, self_blk, prev_blk, prev_blk],
+        in_specs=[self_blk, self_blk, self_blk, prev_blk, prev_blk,
+                  bias_self, bias_prev],
         out_specs=(self_blk, lse_blk),
         out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
                    jax.ShapeDtypeStruct((BH, N), jnp.float32)),
         interpret=interpret,
-    )(q, k, v, k, v)
+    )(q, k, v, k, v, key_bias, key_bias)
 
 
-def _bwd_call(q, k, v, do, lse, delta, *, window, interpret):
+def _bwd_call(q, k, v, key_bias, do, lse, delta, *, window, n_heads, interpret):
     BH, N, D = q.shape
     w = window
+    H = n_heads
     n_b = N // w
     self_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, i, 0))
     prev_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
     next_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.minimum(i + 1, n_b - 1), 0))
+    bias_self = pl.BlockSpec((1, w), lambda b, i: (b // H, i))
+    bias_prev = pl.BlockSpec((1, w), lambda b, i: (b // H, jnp.maximum(i - 1, 0)))
     row_self = pl.BlockSpec((1, w), lambda b, i: (b, i))
     row_next = pl.BlockSpec((1, w), lambda b, i: (b, jnp.minimum(i + 1, n_b - 1)))
     return pl.pallas_call(
@@ -140,6 +159,7 @@ def _bwd_call(q, k, v, do, lse, delta, *, window, interpret):
         in_specs=[self_blk, next_blk,              # q self / next
                   self_blk, prev_blk,              # k self / prev
                   self_blk, prev_blk,              # v self / prev
+                  bias_self, bias_prev,            # key bias self / prev
                   self_blk, next_blk,              # do self / next
                   row_self, row_next,              # lse self / next
                   row_self, row_next],             # delta self / next
@@ -148,33 +168,42 @@ def _bwd_call(q, k, v, do, lse, delta, *, window, interpret):
                    jax.ShapeDtypeStruct((BH, N, D), k.dtype),
                    jax.ShapeDtypeStruct((BH, N, D), v.dtype)),
         interpret=interpret,
-    )(q, q, k, k, v, v, do, do, lse, lse, delta, delta)
+    )(q, q, k, k, v, v, key_bias, key_bias, do, do, lse, lse, delta, delta)
 
 
 @functools.lru_cache(maxsize=None)
-def _make_vjp(window: int, interpret: bool):
-    kw = dict(window=window, interpret=interpret)
+def _make_vjp(window: int, n_heads: int, interpret: bool):
+    kw = dict(window=window, n_heads=n_heads, interpret=interpret)
 
     @jax.custom_vjp
-    def attend(q, k, v):
-        return _fwd_call(q, k, v, **kw)[0]
+    def attend(q, k, v, key_bias):
+        return _fwd_call(q, k, v, key_bias, **kw)[0]
 
-    def attend_fwd(q, k, v):
-        o, lse = _fwd_call(q, k, v, **kw)
-        return o, (q, k, v, o, lse)
+    def attend_fwd(q, k, v, key_bias):
+        o, lse = _fwd_call(q, k, v, key_bias, **kw)
+        return o, (q, k, v, key_bias, o, lse)
 
     def attend_bwd(res, do):
-        q, k, v, o, lse = res
+        q, k, v, key_bias, o, lse = res
         delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
-        return _bwd_call(q, k, v, do, lse, delta, **kw)
+        dq, dk, dv = _bwd_call(q, k, v, key_bias, do, lse, delta, **kw)
+        return dq, dk, dv, None                            # key bias: mask, no grad
 
     attend.defvjp(attend_fwd, attend_bwd)
     return attend
 
 
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
-def local_window_kernel_call(q, k, v, *, window: int, interpret: bool | None = None):
-    """q,k,v: (BH, N, D).  Returns (BH, N, D).  Differentiable in q, k, v."""
+@functools.partial(jax.jit, static_argnames=("window", "n_heads", "interpret"))
+def local_window_kernel_call(q, k, v, key_bias, *, window: int, n_heads: int,
+                             interpret: bool | None = None):
+    """q,k,v: (BH, N, D) flattened over batch×heads; key_bias: (B, N) fp32
+    additive (0 valid / NEG_INF padding).  Returns (BH, N, D).
+    Differentiable in q, k, v (the bias is a mask — its cotangent is dropped)."""
     if interpret is None:
         interpret = should_interpret()
-    return _make_vjp(window, interpret)(q, k, v)
+    if interpret and q.shape[0] > 1:
+        # CPU fallback: per-slice grids keep the interpreter linear in B·H
+        bias_bh = jnp.repeat(key_bias, n_heads, axis=0)
+        return interpret_batch_map(_make_vjp(window, 1, True),
+                                   q, k, v, bias_bh)
+    return _make_vjp(window, n_heads, interpret)(q, k, v, key_bias)

@@ -3,6 +3,26 @@
 
 These are the entry points ``repro.core`` uses when ``cfg.use_kernels``.
 
+Shape/dtype contract (shared by all four wrappers):
+
+  * q is (B, N, Hq, D); k, v are (B, L, Hkv, D).  The wrappers take EQUAL
+    head counts (``selection_attention`` excepted): GQA repetition
+    (Hq = Hkv·rep) is materialised by the caller via
+    ``repro.core.branches.repeat_kv`` before entering the kernel layout.
+  * ``mask`` / ``key_valid`` is a (B, L) bool array, True = real token.
+    It masks KEYS only — padded queries still compute rows (they are cheap
+    and keep shapes static); the model zeroes their outputs.  Internally the
+    mask becomes an additive fp32 key bias (0 valid / NEG_INF = −1e30
+    padding) applied in LOGIT space, which is also exactly what the fused
+    backward kernels recompute — so masked keys receive exactly zero
+    gradient.  A query row whose keys are ALL masked returns zeros.
+  * Any floating dtype is accepted (fp32 and bf16 are tested); softmax
+    statistics are always fp32 inside the kernels.
+
+Batched (ragged) geometries: every wrapper carries a leading batch dim, so a
+packed batch of variable-size samples — one mask row per sample, produced by
+``repro.core.balltree.pack_ragged`` — is a single kernel launch.
+
 All wrappers are differentiable in q/k/v: the kernel calls carry
 ``jax.custom_vjp`` fused backward passes (see each kernel module), and the
 layout transforms here are plain jnp ops, so ``jax.grad`` through
@@ -43,7 +63,13 @@ def _key_bias(mask, B, L):
 
 
 def ball_attention(q, k, v, mask, ball_size: int):
-    """q,k,v: (B,N,H,D) equal head counts; mask: (B,N) bool or None."""
+    """Ball-Tree Attention: full attention inside each contiguous ball.
+
+    q, k, v: (B, N, H, D) EQUAL head counts (repeat KV first for GQA);
+    ``mask``: (B, N) bool (True = real) or None — masks keys in logit space,
+    one row per sample of a packed ragged batch.  ``ball_size`` must divide
+    N.  Returns (B, N, H, D).  Differentiable in q, k, v.
+    """
     B, N, H, D = q.shape
     out = ball_attention_kernel_call(
         _to_bh(q), _to_bh(k), _to_bh(v), _key_bias(mask, B, N),
@@ -54,11 +80,20 @@ def ball_attention(q, k, v, mask, ball_size: int):
 def flash_attention(q, k, v, *, key_valid=None, causal=False,
                     block_causal=False, ell=1, bias=None,
                     tq: int = 256, tk: int = 256):
-    """q: (B,N,H,D); k,v: (B,L,H,D) equal head counts.
+    """Streaming-softmax attention of q vs an arbitrary-length K/V.
 
-    key_valid: (B, L) bool.  ``causal``: token-level; ``block_causal``:
-    coarse-block causality with block length ``ell`` (compression branch).
-    ``bias`` (B,1,1,L) fp32 is accepted as an alternative key bias."""
+    q: (B, N, H, D); k, v: (B, L, H, D) equal head counts (L may differ from
+    N — the compression branch attends N queries to L = N/ℓ coarse tokens).
+
+    ``key_valid``: (B, L) bool, True = real key (per-sample row of a packed
+    ragged batch).  ``causal``: token-level lower-triangular mask (needs
+    L == N).  ``block_causal``: coarse-block causality with block length
+    ``ell`` — query t sees coarse key j iff (j+1)·ell − 1 < t; the mask is
+    generated in-kernel from indices and never materialised.  ``bias``:
+    (B, 1, 1, L) fp32 additive key bias accepted as an alternative to
+    ``key_valid`` (the two add if both given).  ``tq``/``tk`` are tile-size
+    preferences (clamped to divisors of N/L).  Returns (B, N, H, D).
+    Differentiable in q, k, v."""
     B, N, H, D = q.shape
     L = k.shape[1]
     kb = _key_bias(key_valid, B, L)
@@ -70,10 +105,18 @@ def flash_attention(q, k, v, *, key_valid=None, causal=False,
     return _from_bh(out, B, H)
 
 
-def local_window_attention(q, k, v, window: int):
-    """q,k,v: (B,N,H,D) equal head counts."""
+def local_window_attention(q, k, v, window: int, mask=None):
+    """Blocked local causal attention (the LM 'ball' branch).
+
+    q, k, v: (B, N, H, D) equal head counts; query block i (size ``window``)
+    attends causally within itself and fully to block i−1.  ``mask``:
+    (B, N) bool (True = real) or None — key-validity for packed ragged
+    batches, applied in logit space inside the kernel.  Returns
+    (B, N, H, D).  Differentiable in q, k, v."""
     B, N, H, D = q.shape
-    out = local_window_kernel_call(_to_bh(q), _to_bh(k), _to_bh(v), window=window)
+    out = local_window_kernel_call(
+        _to_bh(q), _to_bh(k), _to_bh(v), _key_bias(mask, B, N),
+        window=window, n_heads=H)
     return _from_bh(out, B, H)
 
 
@@ -81,8 +124,17 @@ def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
                         block_size: int, group_size: int):
     """Group-selected sparse attention via the scalar-prefetch kernel.
 
-    q: (B,N,Hq,D); k,v: (B,N,Hkv,D); top_idx/sel_valid: (B,G,Hkv,k*);
-    mask: (B,N) bool or None.  Returns (B,N,Hq,D)."""
+    q: (B, N, Hq, D); k, v: (B, N, Hkv, D) with Hq = Hkv·rep (GQA — the only
+    wrapper that takes the un-repeated KV: all rep query heads of a group
+    share one fetched block set, which is the point of group selection).
+    ``top_idx``/``sel_valid``: (B, G, Hkv, k*) — per query group and KV head,
+    the selected coarse-block ids and their validity (invalid selections are
+    encoded as index −1 for the kernel and skipped).  ``mask``: (B, N) bool
+    or None — token validity of the GATHERED keys (padding inside a selected
+    block is masked in logit space).  ``block_size`` ℓ is the KV block
+    length; ``group_size`` g = N/G tokens per query group.  Returns
+    (B, N, Hq, D).  Differentiable in q, k, v (dK/dV are scatter-added back
+    through the gathered indices)."""
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
     rep = Hq // Hkv

@@ -35,8 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import (NEG_INF, lse_finalize, p_from_lse,
-                                  should_interpret)
+from repro.kernels.common import (NEG_INF, interpret_batch_map, lse_finalize,
+                                  p_from_lse, should_interpret)
 
 __all__ = ["selection_attention_kernel_call"]
 
@@ -280,4 +280,7 @@ def selection_attention_kernel_call(q, kb, vb, idx, tok_bias, *,
     """
     if interpret is None:
         interpret = should_interpret()
+    if interpret and q.shape[0] > 1:
+        # CPU fallback: per-sample grids keep the interpreter linear in B
+        return interpret_batch_map(_make_vjp(True), q, kb, vb, idx, tok_bias)
     return _make_vjp(interpret)(q, kb, vb, idx, tok_bias)

@@ -1,1 +1,1 @@
-from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.engine import ServingEngine, GeometryEngine  # noqa: F401

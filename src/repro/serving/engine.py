@@ -1,13 +1,21 @@
-"""Batched serving engine over the decode path.
+"""Serving engines: LM decode slots and batched ragged geometry inference.
 
-Static-batched generation: a fixed number of slots decode in lockstep (the
-BSA decode cache tracks one shared position — DESIGN §4 notes per-slot
-lengths as the continuous-batching extension).  Prefill is DECODE REPLAY:
-prompts stream token-by-token through ``serve_step``, which is exactly the
-cache semantics the train path matches (unit-tested bit-consistency), so
-generation after a replayed prefill equals teacher forcing.
+``ServingEngine`` — static-batched generation: a fixed number of slots
+decode in lockstep (the BSA decode cache tracks one shared position — DESIGN
+§4 notes per-slot lengths as the continuous-batching extension).  Prefill is
+DECODE REPLAY: prompts stream token-by-token through ``serve_step``, which
+is exactly the cache semantics the train path matches (unit-tested
+bit-consistency), so generation after a replayed prefill equals teacher
+forcing.  Jit boundaries: one compiled ``serve_step`` reused for prefill
+and decode.
 
-Jit boundaries: one compiled ``serve_step`` reused for prefill and decode.
+``GeometryEngine`` — the batched path for variable-size point clouds: each
+request cloud is ball-tree ordered on the host, packed with its batch-mates
+into one padded (B, L, ·) batch + per-sample mask
+(``core.balltree.pack_ragged``), pushed through ONE jitted forward, and
+un-packed / inverse-permuted back to per-cloud predictions.  Padded lengths
+are quantised to geometric buckets so the number of distinct compiled shapes
+stays logarithmic in the size range.
 """
 
 from __future__ import annotations
@@ -18,6 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.balltree import (bucket_length, pack_ragged,
+                                 build_balltree_permutations, unpack_ragged)
 from repro.launch.steps import make_serve_step
 
 
@@ -72,3 +82,76 @@ class ServingEngine:
     @property
     def tokens_per_second(self) -> float:
         return self.tokens_generated / max(self.decode_time, 1e-9)
+
+
+class GeometryEngine:
+    """Batched inference over ragged point clouds (the pointcloud family).
+
+    Requests are (points, feats) pairs of ANY sizes; the engine owns the
+    whole ragged pipeline: per-cloud ball-tree permutation → pack to a
+    bucketed length with per-sample masks → one jitted batched forward →
+    unpack + inverse-permute.  Clouds are served in request order, grouped
+    into batches of ``batch_slots``.
+
+    ``pad_to`` freezes the packed length (single compiled shape — use the
+    dataset's ``max_padded_len`` when the size range is known); otherwise
+    each batch pads to the geometric bucket of its largest cloud, giving at
+    most O(log size-range) compilations.  A short final batch is padded with
+    fully-masked dummy slots rather than recompiling at a smaller B.
+    """
+
+    def __init__(self, api, params, *, batch_slots: int = 8,
+                 pad_to: int | None = None):
+        self.api = api
+        self.params = params
+        self.batch_slots = batch_slots
+        self.pad_to = pad_to
+        self.ball_size = api.mcfg.bsa.ball_size
+        self._fwd = jax.jit(api.forward)
+        self.clouds_served = 0
+        self.points_served = 0
+        self.predict_time = 0.0
+
+    def predict(self, clouds) -> list[np.ndarray]:
+        """clouds: sequence of ``(points (n_i, d), feats (n_i, in_dim))``
+        pairs (or dicts with those keys).  Returns one (n_i, out_dim) array
+        per cloud, rows in the CALLER's original point order."""
+        clouds = [(c["points"], c["feats"]) if isinstance(c, dict) else c
+                  for c in clouds]
+        results: list[np.ndarray] = []
+        t0 = time.time()
+        for s in range(0, len(clouds), self.batch_slots):
+            results.extend(self._predict_batch(clouds[s:s + self.batch_slots]))
+        self.predict_time += time.time() - t0
+        self.clouds_served += len(clouds)
+        self.points_served += sum(int(np.asarray(p).shape[0]) for p, _ in clouds)
+        return results
+
+    def _predict_batch(self, chunk) -> list[np.ndarray]:
+        pts_list = [np.asarray(p) for p, _ in chunk]
+        fts_list = [np.asarray(f, np.float32) for _, f in chunk]
+        perms = build_balltree_permutations(pts_list, self.ball_size)
+        ordered = [f[perm] for f, perm in zip(fts_list, perms)]
+        target = self.pad_to or bucket_length(
+            max(f.shape[0] for f in ordered), self.ball_size)
+        # fully-masked dummy slots keep B static for the final short batch
+        # (every branch returns exact zeros for an all-invalid sample)
+        pad_slots = self.batch_slots - len(chunk)
+        if pad_slots > 0:
+            ordered += [np.zeros((1, ordered[0].shape[1]), np.float32)] * pad_slots
+        feats, mask = pack_ragged(ordered, self.ball_size, pad_to=target)
+        if pad_slots > 0:
+            mask[len(chunk):] = False
+        pred = self._fwd(self.params, {"feats": jnp.asarray(feats),
+                                       "mask": jnp.asarray(mask)})
+        per_cloud = unpack_ragged(np.asarray(pred), mask)[:len(chunk)]
+        out = []
+        for rows, perm in zip(per_cloud, perms):
+            unperm = np.empty_like(rows)
+            unperm[perm] = rows                    # ball order → original order
+            out.append(unperm)
+        return out
+
+    @property
+    def points_per_second(self) -> float:
+        return self.points_served / max(self.predict_time, 1e-9)

@@ -1,0 +1,236 @@
+"""Ragged-batching pipeline: packing helpers, datasets, batched == per-sample.
+
+The load-bearing invariant: a packed batch of MIXED-SIZE point clouds run
+through ``bsa_attention`` in one call equals running every cloud alone —
+forward AND gradients, on both the jnp and the Pallas-kernel path.  Nothing
+in the model may leak information across the batch dim or out of a sample's
+valid prefix.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BSAConfig,
+    bsa_attention,
+    bsa_init,
+    bucket_length,
+    pack_ragged,
+    unpack_ragged,
+)
+from repro.core.nsa_causal import nsa_causal_attention, nsa_init
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _cfg(**kw):
+    base = dict(ball_size=16, local_window=16, cmp_block=8, slc_block=8,
+                top_k=2, group_size=8)
+    base.update(kw)
+    return BSAConfig(**base)
+
+
+def _mixed_batch(sizes, N, Hq=4, Hkv=2, D=16):
+    ks = jax.random.split(KEY, 3)
+    B = len(sizes)
+    q = jax.random.normal(ks[0], (B, N, Hq, D))
+    k = jax.random.normal(ks[1], (B, N, Hkv, D))
+    v = jax.random.normal(ks[2], (B, N, Hkv, D))
+    mask = jnp.stack([jnp.arange(N) < n for n in sizes])
+    return q, k, v, mask
+
+
+# ---------------------------------------------------------------------------
+# host-side packing helpers
+# ---------------------------------------------------------------------------
+
+def test_bucket_length():
+    assert bucket_length(1, 16) == 16
+    assert bucket_length(16, 16) == 16
+    assert bucket_length(17, 16) == 32
+    assert bucket_length(100, 16, geometric=False) == 112
+    # geometric: ball count rounds to a power of two → O(log) distinct shapes
+    assert bucket_length(100, 16) == 128
+    assert bucket_length(129, 16) == 256
+    with pytest.raises(ValueError):
+        bucket_length(0, 16)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    arrays = [rng.standard_normal((n, 5)).astype(np.float32) for n in (7, 30, 16)]
+    batch, mask = pack_ragged(arrays, 16)
+    assert batch.shape == (3, 32, 5) and mask.shape == (3, 32)
+    assert mask.sum(1).tolist() == [7, 30, 16]
+    back = unpack_ragged(batch, mask)
+    for a, b in zip(arrays, back):
+        np.testing.assert_array_equal(a, b)
+    # padding rows are exactly the fill value
+    assert np.all(batch[0, 7:] == 0.0)
+
+
+def test_pack_ragged_pad_to_validation():
+    a = [np.zeros((20, 2))]
+    batch, _ = pack_ragged(a, 16, pad_to=48)
+    assert batch.shape == (1, 48, 2)
+    with pytest.raises(ValueError):
+        pack_ragged(a, 16, pad_to=16)      # smaller than the sample
+    with pytest.raises(ValueError):
+        pack_ragged(a, 16, pad_to=50)      # not a ball multiple
+
+
+def test_dataset_ragged_batches():
+    from repro.data import ShapeNetCarDataset
+    ds = ShapeNetCarDataset("train", ball_size=32, n_points_range=(70, 120))
+    b = next(ds.batches(3, seed=0))
+    B, L, F = b["feats"].shape
+    assert B == 3 and L % 32 == 0 and F == 7
+    lens = b["mask"].sum(1)
+    assert lens.min() >= 70 and lens.max() <= 128   # ragged, ball-padded
+    assert b["target"].shape == (3, L, 1)
+    # masked rows carry no features
+    assert np.all(b["feats"][0, int(lens[0]):] == 0.0)
+    # pad_to freezes the length across batches (single-jit contract)
+    b2 = next(ds.batches(3, seed=1, pad_to=ds.max_padded_len))
+    assert b2["feats"].shape[1] == ds.max_padded_len
+    # deterministic: same index → same sample, regardless of batching
+    s0 = ds[0]
+    s0b = ds[0]
+    np.testing.assert_array_equal(s0["feats"], s0b["feats"])
+
+
+# ---------------------------------------------------------------------------
+# batched bsa == per-sample loop (fwd + grads, jnp and kernel paths)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["jnp", "kernels"])
+def test_bsa_batched_equals_per_sample_loop(use_kernels):
+    N = 64
+    sizes = [64, 40, 24]                    # mixed sizes in one packed batch
+    cfg = _cfg(use_kernels=use_kernels)
+    q, k, v, mask = _mixed_batch(sizes, N)
+    params = bsa_init(jax.random.fold_in(KEY, 1), cfg, n_heads=4, n_kv_heads=2,
+                      head_dim=16, d_model=64)
+    atol = 1e-3 if use_kernels else 1e-5
+
+    def loss(p, q, k, v, m):
+        return jnp.sum(bsa_attention(p, q, k, v, cfg=cfg, mask=m) ** 2)
+
+    out_b = bsa_attention(params, q, k, v, cfg=cfg, mask=mask)
+    loss_b, grads_b = jax.value_and_grad(loss)(params, q, k, v, mask)
+    gq_b, gk_b, gv_b = jax.grad(loss, argnums=(1, 2, 3))(params, q, k, v, mask)
+
+    loss_s = 0.0
+    acc = None
+    for i in range(len(sizes)):
+        sl = lambda t: t[i:i + 1]
+        out_i = bsa_attention(params, sl(q), sl(k), sl(v), cfg=cfg, mask=sl(mask))
+        np.testing.assert_allclose(np.asarray(out_b[i]), np.asarray(out_i[0]),
+                                   atol=atol, rtol=atol,
+                                   err_msg=f"fwd sample {i} (n={sizes[i]})")
+        li, gi = jax.value_and_grad(loss)(params, sl(q), sl(k), sl(v), sl(mask))
+        gq_i, gk_i, gv_i = jax.grad(loss, argnums=(1, 2, 3))(
+            params, sl(q), sl(k), sl(v), sl(mask))
+        loss_s += li
+        acc = gi if acc is None else jax.tree.map(jnp.add, acc, gi)
+        for b_arr, i_arr, nm in ((gq_b, gq_i, "dq"), (gk_b, gk_i, "dk"),
+                                 (gv_b, gv_i, "dv")):
+            np.testing.assert_allclose(np.asarray(b_arr[i]), np.asarray(i_arr[0]),
+                                       atol=atol, rtol=atol,
+                                       err_msg=f"{nm} sample {i}")
+
+    np.testing.assert_allclose(float(loss_b), float(loss_s), rtol=1e-5)
+    for pb, ps in zip(jax.tree.leaves(grads_b), jax.tree.leaves(acc)):
+        np.testing.assert_allclose(np.asarray(pb), np.asarray(ps),
+                                   atol=atol, rtol=1e-3)
+    # padded query rows are zeroed in the output
+    np.testing.assert_allclose(np.asarray(out_b[2, 24:]), 0.0, atol=1e-7)
+
+
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["jnp", "kernels"])
+def test_nsa_causal_batched_equals_per_sample_loop(use_kernels):
+    """Same invariant for the causal LM variant (local-window kernel mask)."""
+    N = 64
+    sizes = [64, 40]
+    cfg = _cfg(use_kernels=use_kernels)
+    q, k, v, mask = _mixed_batch(sizes, N)
+    params = nsa_init(jax.random.fold_in(KEY, 2), cfg, n_heads=4, n_kv_heads=2,
+                      head_dim=16, d_model=64)
+    atol = 1e-3 if use_kernels else 1e-5
+    out_b = nsa_causal_attention(params, q, k, v, cfg=cfg, mask=mask)
+    for i in range(len(sizes)):
+        sl = lambda t: t[i:i + 1]
+        out_i = nsa_causal_attention(params, sl(q), sl(k), sl(v), cfg=cfg,
+                                     mask=sl(mask))
+        np.testing.assert_allclose(np.asarray(out_b[i]), np.asarray(out_i[0]),
+                                   atol=atol, rtol=atol)
+
+
+def test_local_window_kernel_mask_parity():
+    """Masked local kernel == masked jnp reference (fwd + grads)."""
+    from repro.kernels import ops, ref
+    B, N, H, D, w = 2, 64, 2, 16, 16
+    ks = jax.random.split(KEY, 3)
+    q, k, v = (jax.random.normal(kk, (B, N, H, D)) for kk in ks)
+    mask = jnp.ones((B, N), bool).at[0, 40:].set(False).at[1, 25:].set(False)
+
+    def make_loss(fn):
+        def loss(q, k, v):
+            o = fn(q, k, v)
+            return jnp.sum(jnp.where(mask[:, :, None, None], o, 0.0) ** 2)
+        return loss
+
+    out = ops.local_window_attention(q, k, v, w, mask=mask)
+    want = ref.local_window_attention_ref(q, k, v, w, mask=mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    g_k = jax.grad(make_loss(
+        lambda q, k, v: ops.local_window_attention(q, k, v, w, mask=mask)),
+        argnums=(0, 1, 2))(q, k, v)
+    g_r = jax.grad(make_loss(
+        lambda q, k, v: ref.local_window_attention_ref(q, k, v, w, mask=mask)),
+        argnums=(0, 1, 2))(q, k, v)
+    for a, b, nm in zip(g_k, g_r, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-3, rtol=1e-3, err_msg=nm)
+    # masked keys get exactly zero gradient
+    np.testing.assert_allclose(np.asarray(g_k[1][0, 40:]), 0.0, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# serving: ragged clouds end-to-end
+# ---------------------------------------------------------------------------
+
+def test_geometry_engine_matches_solo_forward():
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models.api import model_api
+    from repro.serving import GeometryEngine
+
+    mcfg = get_config("shapenet-bsa").scaled(
+        n_layers=2, d_model=32, n_heads=2, head_dim=16, n_kv_heads=2, d_ff=64)
+    mcfg = mcfg.scaled(bsa=dataclasses.replace(mcfg.bsa, ball_size=16,
+                                               local_window=16))
+    api = model_api(mcfg)
+    params = api.init(jax.random.PRNGKey(0))
+    eng = GeometryEngine(api, params, batch_slots=3)
+
+    rng = np.random.default_rng(3)
+    clouds = []
+    for n in (20, 45, 33, 11):              # forces a short final batch too
+        pts = rng.standard_normal((n, 3)).astype(np.float32)
+        feats = rng.standard_normal((n, mcfg.in_dim)).astype(np.float32)
+        clouds.append((pts, feats))
+
+    outs = eng.predict(clouds)
+    assert [o.shape for o in outs] == [(20, 1), (45, 1), (33, 1), (11, 1)]
+    assert eng.clouds_served == 4 and eng.points_served == 20 + 45 + 33 + 11
+    # every batched prediction equals serving the cloud alone
+    for c, o in zip(clouds, outs):
+        solo = eng.predict([c])[0]
+        np.testing.assert_allclose(solo, o, atol=1e-5, rtol=1e-5)
