@@ -124,6 +124,8 @@ def apply_overrides(mcfg, args):
         kw["slc_block"] = args.ell
     if args.window:
         kw["local_window"] = args.window
+    if args.backend:
+        kw["backend"] = args.backend
     if kw:
         bsa = dataclasses.replace(bsa, **kw)
     m = {}
@@ -136,10 +138,11 @@ def apply_overrides(mcfg, args):
 
 def time_kernel_train_step(args) -> None:
     """§Kernel-path training: EXECUTE (not just lower) one full fwd+bwd
-    train step of BSA attention with ``use_kernels=True`` and report wall
-    time — the measurement the differentiable Pallas path unlocks.  On this
-    CPU container kernels run under interpret mode (set
-    REPRO_PALLAS_INTERPRET=0 on TPU hosts for compiled numbers).
+    train step of BSA attention on a named backend (default ``pallas``;
+    ``--backend jnp|interpret|...`` swaps it with no other changes) and
+    report wall time — the measurement the differentiable Pallas path
+    unlocks.  On this CPU container the pallas backend runs under interpret
+    mode (set REPRO_PALLAS_INTERPRET=0 on TPU hosts for compiled numbers).
 
     With ``--batch B > 1`` the same step is ALSO timed as B sequential
     single-sample calls (the pre-ragged-batching trainer pattern) and both
@@ -155,6 +158,7 @@ def time_kernel_train_step(args) -> None:
 
     from benchmarks.common import emit, time_fn
     from repro.core import BSAConfig, bsa_attention, bsa_init
+    from repro.core.backend import resolve_backend_name
     from repro.kernels.common import should_interpret
 
     B, N, Hq, Hkv, D = args.batch, args.n, args.heads, args.kv_heads, args.head_dim
@@ -162,9 +166,10 @@ def time_kernel_train_step(args) -> None:
     if N % ball or N % 8:
         raise SystemExit(f"--n {N} must be a multiple of the ball size {ball} "
                          "(and of the group size 8)")
+    backend = args.backend or "pallas"
     cfg = BSAConfig(ball_size=ball, local_window=ball,
                     cmp_block=args.ell or 8, slc_block=args.ell or 8,
-                    top_k=args.topk or 4, group_size=8, use_kernels=True)
+                    top_k=args.topk or 4, group_size=8, backend=backend)
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     q = jax.random.normal(ks[0], (B, N, Hq, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, N, Hkv, D), jnp.float32)
@@ -190,7 +195,11 @@ def time_kernel_train_step(args) -> None:
         return out
 
     us = time_fn(run, params, q, k, v, mask, warmup=2, iters=5)
-    mode = "interpret" if should_interpret() else "compiled"
+    resolved = resolve_backend_name(backend)     # env/context may override
+    if resolved in ("jnp", "interpret"):
+        mode = resolved
+    else:
+        mode = f"{resolved}-{'interpret' if should_interpret() else 'compiled'}"
     pps = n_pts / (us / 1e6)
     tag = "_ragged" if args.ragged else ""      # distinct trajectory entries
     emit(f"perf_iter/kernel_train_step_b{B}_n{N}{tag}", us,
@@ -234,6 +243,9 @@ def main():
     ap.add_argument("--window", type=int, default=0)
     ap.add_argument("--attn-seq", action="store_true")
     ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    help="attention backend: jnp | pallas | interpret | auto "
+                         "| any registered plug-in (kernel-step default: pallas)")
     ap.add_argument("--tag", default="")
     ap.add_argument("--kernel-step", action="store_true",
                     help="time one executed fwd+bwd BSA step on the kernel path "

@@ -33,7 +33,7 @@ def smoke() -> None:
 
     B, N, Hq, Hkv, D, dm = 1, 128, 4, 2, 32, 64
     cfg = BSAConfig(ball_size=32, local_window=32, cmp_block=8, slc_block=8,
-                    top_k=2, group_size=8, use_kernels=True)
+                    top_k=2, group_size=8, backend="pallas")
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     q = jax.random.normal(ks[0], (B, N, Hq, D))
     k = jax.random.normal(ks[1], (B, N, Hkv, D))

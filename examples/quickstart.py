@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BSAConfig, bsa_attention, bsa_init
+from repro.core import BSAConfig, bsa_attention, bsa_init, use_backend
 from repro.core.balltree import build_balltree_permutation, ragged_ball_order, unpack_ragged
 
 # 1. a point cloud (unordered!) and its features
@@ -69,3 +69,14 @@ solo = bsa_attention(params, qb[0:1], kb[0:1], vb[0:1], cfg=cfg,
                      mask=jnp.asarray(mask[0:1]))
 assert np.allclose(np.asarray(out_b[0]), np.asarray(solo[0]), atol=1e-5)
 print("batched == per-sample (padded cloud): OK")
+
+# 5. NAMED BACKENDS: the same call on a different execution engine.  The
+#    default cfg.backend="auto" picks the Pallas kernels on TPU and the jnp
+#    reference elsewhere; `with use_backend(...)` forces one for a scope
+#    (REPRO_ATTENTION_BACKEND=... does the same process-wide, e.g. in CI).
+qs, ks_, vs = q[:, :512], k[:, :512], v[:, :512]    # small slice — interpret
+out_ref = bsa_attention(params, qs, ks_, vs, cfg=cfg)        # mode is slow
+with use_backend("interpret"):      # Pallas kernel bodies, executed as Python
+    out_int = bsa_attention(params, qs, ks_, vs, cfg=cfg)
+assert np.allclose(np.asarray(out_ref), np.asarray(out_int), atol=1e-3)
+print("backend swap jnp/auto ↔ interpret: same result, zero call-site changes")

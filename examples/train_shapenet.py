@@ -45,9 +45,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--layers", type=int, default=0, help="override (0=config)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--backend", default=None,
+                    help="attention backend: jnp | pallas | interpret | auto | "
+                         "any registered plug-in (default: config; 'pallas' "
+                         "trains through the fused custom-VJP kernels — "
+                         "interpret mode on CPU, compiled on TPU)")
     ap.add_argument("--use-kernels", action="store_true",
-                    help="train through the fused Pallas kernels (the custom-VJP "
-                         "backward path; interpret mode on CPU, compiled on TPU)")
+                    help="DEPRECATED: same as --backend pallas")
     ap.add_argument("--var-points", type=int, nargs=2, metavar=("LO", "HI"),
                     default=None,
                     help="ragged geometries: per-sample point counts drawn from "
@@ -57,9 +61,15 @@ def main():
     mcfg = get_config(args.arch)
     if args.layers:
         mcfg = mcfg.scaled(n_layers=args.layers)
+    backend = args.backend
     if args.use_kernels:
+        import warnings
+        warnings.warn("--use-kernels is deprecated; use --backend pallas",
+                      DeprecationWarning)
+        backend = backend or "pallas"
+    if backend:
         import dataclasses
-        mcfg = mcfg.scaled(bsa=dataclasses.replace(mcfg.bsa, use_kernels=True))
+        mcfg = mcfg.scaled(bsa=dataclasses.replace(mcfg.bsa, backend=backend))
     api = model_api(mcfg)
     nrange = tuple(args.var_points) if args.var_points else None
     train_ds = ShapeNetCarDataset("train", n_points_range=nrange)

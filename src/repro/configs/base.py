@@ -28,8 +28,11 @@ class ModelConfig:
     vocab_size: int
     head_dim: int = 0                # 0 ⇒ d_model // n_heads
 
-    # --- attention backend ---
-    attention: str = "bsa"           # bsa | full | erwin
+    # --- attention ---
+    attention: str = "bsa"           # MECHANISM: bsa | full | erwin.  The
+                                     # execution BACKEND (jnp/pallas/interpret/
+                                     # plug-in) is orthogonal: bsa.backend —
+                                     # see repro.core.backend
     bsa: BSAConfig = dataclasses.field(default_factory=BSAConfig)
     rope_theta: float = 1e4
 

@@ -5,7 +5,13 @@ map from paper sections to modules):
 
   * :class:`BSAConfig` — all paper hyperparameters (ball size m, compression
     block ℓ, top-k k*, group size g, gating mode) plus implementation knobs
-    (``use_kernels``, ``jnp_chunk_tokens``).
+    (``backend``, ``backend_overrides``, ``jnp_chunk_tokens``).
+  * Attention backends (``repro.core.backend``): execution is dispatched
+    through a named-backend registry — ``"jnp"`` (reference), ``"pallas"``
+    (fused TPU kernels), ``"interpret"`` (kernels forced to interpret mode),
+    ``"auto"`` (platform pick) — selected by ``BSAConfig.backend``, scoped
+    with ``with use_backend("..."):``, forced globally via
+    ``REPRO_ATTENTION_BACKEND``, and extended via :func:`register_backend`.
   * :func:`bsa_attention` / :func:`bsa_init` — non-causal BSA on ball-ordered
     point sequences.  q: (B, N, Hq, D); k, v: (B, N, Hkv, D) with
     Hq = Hkv·rep (GQA); ``mask``: (B, N) bool, True = real token — one row
@@ -27,6 +33,16 @@ map from paper sections to modules):
 """
 
 from repro.core.config import BSAConfig  # noqa: F401
+from repro.core.backend import (  # noqa: F401
+    Backend,
+    JnpBackend,
+    PallasBackend,
+    get_backend,
+    list_backends,
+    register_backend,
+    resolve_backend,
+    use_backend,
+)
 from repro.core.bsa import bsa_init, bsa_attention, ball_attention_ref  # noqa: F401
 from repro.core.nsa_causal import (  # noqa: F401
     nsa_init,

@@ -1,0 +1,336 @@
+"""Pluggable attention-backend registry — the kernel/reference seam as API.
+
+Every attention entry point (``bsa_attention``, ``nsa_causal_attention``,
+``erwin_attention``, ``full_attention``) executes its hot loops through a
+:class:`Backend`: an object providing the four primitive attention ops
+
+  * ``ball``          — full attention inside contiguous balls (BTA),
+  * ``flash``         — streaming-softmax q vs arbitrary-length K/V with the
+                        BSA mask modes (key validity, token-causal,
+                        block-causal),
+  * ``local_window``  — blocked local causal attention (the LM ball branch),
+  * ``selection``     — group top-k gathered-block attention (GQA-aware).
+
+All four ops are differentiable (the Pallas implementations carry fused
+``jax.custom_vjp`` backwards, the jnp ones differentiate natively), take the
+``core`` tensor convention — q ``(B, N, Hq, D)``, k/v ``(B, L, H, D)``,
+masks ``(B, L)`` bool with True = real token — and honour the shared
+logit-space masking rules (``repro.numerics``), so backends are
+interchangeable without call-site changes.
+
+Built-ins:
+
+  ``"jnp"``        pure-jnp reference (optionally memory-bounded via
+                   ``chunk_tokens``),
+  ``"pallas"``     the Pallas TPU kernels (interpret mode auto-detected on
+                   non-TPU hosts, see ``kernels/common.should_interpret``),
+  ``"interpret"``  the Pallas kernels FORCED into interpret mode — the
+                   kernel bodies execute as Python everywhere (debugging /
+                   CI parity legs),
+  ``"auto"``       resolves to ``"pallas"`` on TPU, ``"jnp"`` otherwise.
+
+Third-party/test backends plug in via :func:`register_backend`; anything
+satisfying the :class:`Backend` protocol works (e.g. an instrumented
+counting wrapper, a sharded implementation, a different accelerator).
+
+Resolution precedence (weakest → strongest)::
+
+    BSAConfig.backend  <  with use_backend("..."):  <  REPRO_ATTENTION_BACKEND
+
+The environment variable and the context manager force ONE backend for all
+branches (that is their point: CI legs and experiments override everything
+below them).  Absent both, ``BSAConfig.backend`` is the base choice and
+``BSAConfig.backend_overrides`` may redirect individual branches, e.g.
+``BSAConfig(backend="pallas", backend_overrides={"slc": "jnp"})`` runs only
+the selection branch on the reference path.  Branch keys are ``"ball"``
+(which also governs the local-window branch of the causal variant),
+``"cmp"`` and ``"slc"``.
+
+Resolution happens at TRACE time (plain Python), so a jitted function bakes
+in whatever backend was active when it was traced — re-trace (new jit or new
+shapes) to switch.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Iterator, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.numerics import mask_to_bias
+
+__all__ = [
+    "Backend",
+    "JnpBackend",
+    "PallasBackend",
+    "ENV_VAR",
+    "DEFAULT_BACKEND",
+    "BRANCH_KEYS",
+    "register_backend",
+    "get_backend",
+    "list_backends",
+    "use_backend",
+    "resolve_backend",
+    "resolve_backend_name",
+    "resolve_branch_backends",
+]
+
+ENV_VAR = "REPRO_ATTENTION_BACKEND"
+DEFAULT_BACKEND = "auto"
+BRANCH_KEYS = ("ball", "cmp", "slc")
+
+
+# ---------------------------------------------------------------------------
+# The protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Backend(Protocol):
+    """The four primitive attention ops a backend must provide.
+
+    Shapes follow ``core``: q is (B, N, Hq, D); k/v are (B, L, H, D).
+    ``ball``/``flash``/``local_window`` take EQUAL head counts (callers
+    repeat KV via ``branches.repeat_kv``); ``selection`` consumes the
+    un-repeated (B, L, Hkv, D) KV — all ``rep`` query heads of a GQA group
+    share one fetched block set.  ``chunk_tokens`` is a memory bound the
+    jnp backend honours (query-tile ``lax.map``); kernel backends ignore it.
+    Every op must be differentiable in q, k, v.
+    """
+
+    name: str
+
+    def ball(self, q, k, v, mask, *, ball_size: int,
+             chunk_tokens: int = 0) -> jnp.ndarray: ...
+
+    def flash(self, q, k, v, *, key_valid=None, causal: bool = False,
+              block_causal: bool = False, ell: int = 1,
+              chunk_tokens: int = 0) -> jnp.ndarray: ...
+
+    def local_window(self, q, k, v, *, window: int, mask=None,
+                     chunk_tokens: int = 0) -> jnp.ndarray: ...
+
+    def selection(self, q, k, v, top_idx, sel_valid, mask, *, block_size: int,
+                  group_size: int, chunk_tokens: int = 0) -> jnp.ndarray: ...
+
+
+# ---------------------------------------------------------------------------
+# Built-in: pure-jnp reference
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class JnpBackend:
+    """Reference implementations from ``core`` — run anywhere, differentiate
+    natively, and serve as the parity oracle for every other backend."""
+
+    name: str = "jnp"
+
+    def ball(self, q, k, v, mask, *, ball_size, chunk_tokens=0):
+        from repro.core.bsa import ball_attention_ref
+        cb = max(chunk_tokens // ball_size, 1) if chunk_tokens else 0
+        return ball_attention_ref(q, k, v, mask, ball_size, chunk_balls=cb)
+
+    def flash(self, q, k, v, *, key_valid=None, causal=False,
+              block_causal=False, ell=1, chunk_tokens=0):
+        from repro.core.branches import chunked_q_attention, sdpa
+        if not causal:
+            # chunked_q_attention owns the key-valid and block-causal bias
+            # rules; chunk=0 is the dense one-shot path
+            return chunked_q_attention(q, k, v, key_valid=key_valid,
+                                       block_causal_ell=ell if block_causal else 0,
+                                       chunk=chunk_tokens)
+        B, N, H, D = q.shape
+        L = k.shape[1]
+        bias = jnp.zeros((1, 1, 1, L), jnp.float32)
+        if key_valid is not None:
+            bias = bias + mask_to_bias(key_valid[:, None, None, :])
+        qi = jnp.arange(N)[:, None] + (L - N)       # align ends (cache decoding)
+        ki = jnp.arange(L)[None, :]
+        bias = bias + mask_to_bias((ki <= qi)[None, None])
+        out = sdpa(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                   v.transpose(0, 2, 1, 3), bias)
+        return out.transpose(0, 2, 1, 3)
+
+    def local_window(self, q, k, v, *, window, mask=None, chunk_tokens=0):
+        from repro.core.nsa_causal import local_window_attention_ref
+        cb = max(chunk_tokens // window, 1) if chunk_tokens else 0
+        return local_window_attention_ref(q, k, v, window, mask=mask,
+                                          chunk_blocks=cb)
+
+    def selection(self, q, k, v, top_idx, sel_valid, mask, *, block_size,
+                  group_size, chunk_tokens=0):
+        from repro.core.branches import selection_attend
+        return selection_attend(q, k, v, top_idx, sel_valid, mask,
+                                block_size=block_size, chunk_tokens=chunk_tokens)
+
+
+# ---------------------------------------------------------------------------
+# Built-in: Pallas kernels (compiled on TPU, interpret elsewhere)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend:
+    """The fused Pallas kernel path (``repro.kernels.ops``).
+
+    ``interpret=None`` auto-detects (compiled on TPU, interpret mode
+    elsewhere — same rule as ``REPRO_PALLAS_INTERPRET``); ``interpret=True``
+    is the ``"interpret"`` built-in, forcing the kernel bodies to execute as
+    Python everywhere.  ``chunk_tokens`` is ignored: the kernels stream
+    through VMEM tiles by construction.
+    """
+
+    name: str = "pallas"
+    interpret: bool | None = None
+
+    def ball(self, q, k, v, mask, *, ball_size, chunk_tokens=0):
+        from repro.kernels import ops as kops
+        return kops.ball_attention(q, k, v, mask, ball_size,
+                                   interpret=self.interpret)
+
+    def flash(self, q, k, v, *, key_valid=None, causal=False,
+              block_causal=False, ell=1, chunk_tokens=0):
+        from repro.kernels import ops as kops
+        assert not causal or k.shape[1] == q.shape[1], \
+            "kernel path assumes aligned q/k for token-level causal"
+        return kops.flash_attention(q, k, v, key_valid=key_valid, causal=causal,
+                                    block_causal=block_causal, ell=ell,
+                                    interpret=self.interpret)
+
+    def local_window(self, q, k, v, *, window, mask=None, chunk_tokens=0):
+        from repro.kernels import ops as kops
+        return kops.local_window_attention(q, k, v, window, mask=mask,
+                                           interpret=self.interpret)
+
+    def selection(self, q, k, v, top_idx, sel_valid, mask, *, block_size,
+                  group_size, chunk_tokens=0):
+        from repro.kernels import ops as kops
+        return kops.selection_attention(q, k, v, top_idx, sel_valid, mask,
+                                        block_size=block_size,
+                                        group_size=group_size,
+                                        interpret=self.interpret)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Backend] = {}
+_tls = threading.local()
+
+
+def register_backend(name: str, backend: Backend, *,
+                     overwrite: bool = False) -> Backend:
+    """Register ``backend`` under ``name`` (the plug-in seam).
+
+    ``name`` becomes valid everywhere a backend is named: ``BSAConfig``,
+    ``backend_overrides``, ``use_backend(...)`` and ``REPRO_ATTENTION_BACKEND``.
+    Re-registering an existing name requires ``overwrite=True``.  Returns the
+    backend (decorator-friendly for classes with a zero-arg constructor).
+    """
+    if name == "auto":
+        raise ValueError('"auto" is reserved (resolves to pallas on TPU, '
+                         "jnp elsewhere)")
+    if not isinstance(backend, Backend):
+        missing = [op for op in ("ball", "flash", "local_window", "selection")
+                   if not callable(getattr(backend, op, None))]
+        raise TypeError(f"backend {name!r} does not satisfy the Backend "
+                        f"protocol (missing ops: {missing})")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    """Look up a registered backend; ``"auto"`` resolves by platform."""
+    if name == "auto":
+        name = _auto_name()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown attention backend {name!r}; registered: "
+            f"{list_backends()} (register_backend() adds more, "
+            f"${ENV_VAR} / use_backend() must name one of these)") from None
+
+
+def list_backends() -> list[str]:
+    """Registered backend names (excluding the ``"auto"`` alias)."""
+    return sorted(_REGISTRY)
+
+
+def _auto_name() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Resolution: config < context manager < environment
+# ---------------------------------------------------------------------------
+
+def _context_name() -> str | None:
+    stack = getattr(_tls, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_backend(name: str) -> Iterator[Backend]:
+    """Force backend ``name`` for every attention call traced in this block
+    (this thread).  Nests; beaten only by ``REPRO_ATTENTION_BACKEND``."""
+    backend = get_backend(name)          # fail fast on unknown names
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    stack.append(name)
+    try:
+        yield backend
+    finally:
+        stack.pop()
+
+
+def resolve_backend_name(name: str | None = None) -> str:
+    """Apply the precedence chain to a config-level ``name`` (may be None)."""
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return env
+    ctx = _context_name()
+    if ctx:
+        return ctx
+    return name or DEFAULT_BACKEND
+
+
+def resolve_backend(name: "str | Backend | None" = None) -> Backend:
+    """Resolve a config-level backend name to a Backend object.
+
+    ``name`` may also be a Backend instance, which is returned as-is
+    (programmatic escape hatch — bypasses context/env overrides).
+    """
+    if name is not None and not isinstance(name, str):
+        return name
+    return get_backend(resolve_backend_name(name))
+
+
+def resolve_branch_backends(cfg) -> dict[str, Backend]:
+    """Per-branch backends for ``bsa_attention`` / ``nsa_causal_attention``.
+
+    Returns ``{"ball": Backend, "cmp": Backend, "slc": Backend}``.  An active
+    environment/context override forces one backend for ALL branches;
+    otherwise ``cfg.backend`` is the base and ``cfg.backend_overrides``
+    redirects individual branches.
+    """
+    forced = os.environ.get(ENV_VAR) or _context_name()
+    if forced:
+        bk = get_backend(forced)
+        return {b: bk for b in BRANCH_KEYS}
+    base = cfg.backend or DEFAULT_BACKEND
+    overrides = dict(cfg.backend_overrides or ())
+    return {b: get_backend(overrides.get(b, base)) for b in BRANCH_KEYS}
+
+
+register_backend("jnp", JnpBackend())
+register_backend("pallas", PallasBackend("pallas", None))
+register_backend("interpret", PallasBackend("interpret", True))

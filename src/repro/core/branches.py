@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.layers.nn import dense, dense_init
-
-NEG_INF = -1e30
+from repro.numerics import NEG_INF, mask_to_bias  # noqa: F401 — canonical defs
+                                                  # (re-exported for callers)
 
 
 # ---------------------------------------------------------------------------
@@ -132,11 +132,6 @@ def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.astype(v.dtype)
 
 
-def mask_to_bias(valid: jnp.ndarray) -> jnp.ndarray:
-    """bool (… L) -> additive fp32 bias 0 / NEG_INF."""
-    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
-
-
 # ---------------------------------------------------------------------------
 # Memory-bounded (chunked) attention paths for the pure-jnp fallback.
 #
@@ -189,15 +184,17 @@ def gather_attend_blocks(q_g, kb, vb, idx, sel_valid, tok_valid, scale_dim: int)
     return out.transpose(2, 0, 4, 1, 3, 5)               # (G,B,g,Hkv,rep,D)
 
 
-def selection_attend(q, k, v, top_idx, sel_valid, mask, cfg):
+def selection_attend(q, k, v, top_idx, sel_valid, mask, *, block_size: int,
+                     chunk_tokens: int = 0):
     """Orchestrates layout + optional chunking for the jnp selection branch.
 
-    q: (B,N,Hq,D); k/v: (B,N,Hkv,D); top_idx/sel_valid: (B,G,Hkv,k*).
-    Returns (B,N,Hq,D)."""
+    q: (B,N,Hq,D); k/v: (B,N,Hkv,D); top_idx/sel_valid: (B,G,Hkv,k*);
+    ``block_size`` is the KV block length ℓ, ``chunk_tokens`` the optional
+    query-memory bound.  Returns (B,N,Hq,D)."""
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
     rep = Hq // Hkv
-    ell = cfg.slc_block
+    ell = block_size
     nb = N // ell
     G = top_idx.shape[1]
     g = N // G
@@ -208,7 +205,7 @@ def selection_attend(q, k, v, top_idx, sel_valid, mask, cfg):
     idx_g = top_idx.transpose(1, 0, 2, 3)
     val_g = sel_valid.transpose(1, 0, 2, 3)
 
-    chunk_groups = max(cfg.jnp_chunk_tokens // g, 1) if cfg.jnp_chunk_tokens else 0
+    chunk_groups = max(chunk_tokens // g, 1) if chunk_tokens else 0
     if chunk_groups and G % chunk_groups == 0 and G > chunk_groups:
         nc = G // chunk_groups
         xs = (q_g.reshape(nc, chunk_groups, *q_g.shape[1:]),

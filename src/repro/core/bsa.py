@@ -21,10 +21,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import resolve_branch_backends
 from repro.core.branches import (
     NEG_INF,
     block_validity,
-    chunked_q_attention,
     gate_values,
     gates_init,
     mask_to_bias,
@@ -32,7 +32,6 @@ from repro.core.branches import (
     phi_init,
     repeat_kv,
     sdpa,
-    selection_attend,
 )
 from repro.core.config import BSAConfig
 
@@ -93,21 +92,18 @@ def ball_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.transpose(0, 1, 3, 2, 4).reshape(B, N, H, D)
 
 
-def _ball_branch(q, k, v, mask, cfg: BSAConfig):
+def _ball_branch(q, k, v, mask, cfg: BSAConfig, backend):
     rep = q.shape[2] // k.shape[2]
     kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-        return kops.ball_attention(q, kf, vf, mask, cfg.ball_size)
-    cb = max(cfg.jnp_chunk_tokens // cfg.ball_size, 1) if cfg.jnp_chunk_tokens else 0
-    return ball_attention_ref(q, kf, vf, mask, cfg.ball_size, chunk_balls=cb)
+    return backend.ball(q, kf, vf, mask, ball_size=cfg.ball_size,
+                        chunk_tokens=cfg.jnp_chunk_tokens)
 
 
 # ---------------------------------------------------------------------------
 # Branch 2 — Compression
 # ---------------------------------------------------------------------------
 
-def _compression_branch(params, q, k, v, mask, cfg: BSAConfig):
+def _compression_branch(params, q, k, v, mask, cfg: BSAConfig, backend):
     """Returns (out, k_cmp, v_cmp, blk_valid). out: (B, N, Hq, D)."""
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
@@ -116,32 +112,18 @@ def _compression_branch(params, q, k, v, mask, cfg: BSAConfig):
     v_cmp = phi_apply(params["phi_v"], v, mask, cfg)
     blk_valid = block_validity(mask, B, N, cfg.cmp_block)          # (B,NB)
     kf, vf = repeat_kv(k_cmp, rep), repeat_kv(v_cmp, rep)          # (B,NB,Hq,D)
-    bias = mask_to_bias(blk_valid[:, None, None, :])               # (B,1,1,NB)
 
     if cfg.group_compression:
         # Eq. 15: pool queries too; attend at block level; repeat ℓ×.
         q_cmp = phi_apply(params["phi_q"], q, mask, cfg)           # (B,NB,Hq,D)
-        out_c = _dense_attention(q_cmp, kf, vf, bias, cfg)         # (B,NB,Hq,D)
+        out_c = backend.flash(q_cmp, kf, vf, key_valid=blk_valid,
+                              chunk_tokens=cfg.jnp_chunk_tokens)   # (B,NB,Hq,D)
         out = jnp.repeat(out_c, cfg.cmp_block, axis=1)             # (B,N,Hq,D)
         return out, k_cmp, v_cmp, blk_valid
 
-    out = _dense_attention(q, kf, vf, bias, cfg, key_valid=blk_valid)
+    out = backend.flash(q, kf, vf, key_valid=blk_valid,
+                        chunk_tokens=cfg.jnp_chunk_tokens)
     return out, k_cmp, v_cmp, blk_valid
-
-
-def _dense_attention(q, k, v, bias, cfg: BSAConfig, key_valid=None):
-    """q: (B,M,H,D) vs k,v: (B,L,H,D); bias broadcastable to (B,H,M,L)."""
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-        return kops.flash_attention(q, k, v, bias=bias)
-    if cfg.jnp_chunk_tokens and key_valid is not None:
-        return chunked_q_attention(q, k, v, key_valid=key_valid,
-                                   chunk=cfg.jnp_chunk_tokens)
-    qh = q.transpose(0, 2, 1, 3)                                   # (B,H,M,D)
-    kh = k.transpose(0, 2, 1, 3)
-    vh = v.transpose(0, 2, 1, 3)
-    out = sdpa(qh, kh, vh, bias)
-    return out.transpose(0, 2, 1, 3)
 
 
 # ---------------------------------------------------------------------------
@@ -201,7 +183,8 @@ def _diag_scores(q, k_cmp, rep):
                       preferred_element_type=jnp.float32)
 
 
-def _selection_branch(params, q, k, v, k_cmp, blk_valid, mask, cfg: BSAConfig):
+def _selection_branch(params, q, k, v, k_cmp, blk_valid, mask, cfg: BSAConfig,
+                      backend):
     """Top-k block gather + exact attention.  Returns (out, indices)."""
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
@@ -216,13 +199,9 @@ def _selection_branch(params, q, k, v, k_cmp, blk_valid, mask, cfg: BSAConfig):
     top_vals, top_idx = jax.lax.top_k(scores, k_star)              # (B,G,Hkv,k*)
     sel_valid = top_vals > NEG_INF / 2                              # (B,G,Hkv,k*)
 
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-        out = kops.selection_attention(q, k, v, top_idx, sel_valid, mask,
-                                       block_size=ell, group_size=g)
-        return out, top_idx
-
-    out = selection_attend(q, k, v, top_idx, sel_valid, mask, cfg)
+    out = backend.selection(q, k, v, top_idx, sel_valid, mask,
+                            block_size=ell, group_size=g,
+                            chunk_tokens=cfg.jnp_chunk_tokens)
     return out, top_idx
 
 
@@ -247,9 +226,12 @@ def bsa_attention(params: dict, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     assert k.shape[:2] == (B, N) and v.shape == k.shape
     assert Hq % k.shape[2] == 0, "q heads must be a multiple of kv heads"
 
-    out_ball = _ball_branch(q, k, v, mask, cfg)
-    out_cmp, k_cmp, v_cmp, blk_valid = _compression_branch(params, q, k, v, mask, cfg)
-    out_slc, top_idx = _selection_branch(params, q, k, v, k_cmp, blk_valid, mask, cfg)
+    bk = resolve_branch_backends(cfg)
+    out_ball = _ball_branch(q, k, v, mask, cfg, bk["ball"])
+    out_cmp, k_cmp, v_cmp, blk_valid = _compression_branch(
+        params, q, k, v, mask, cfg, bk["cmp"])
+    out_slc, top_idx = _selection_branch(
+        params, q, k, v, k_cmp, blk_valid, mask, cfg, bk["slc"])
 
     gates = gate_values(params["gates"], cfg, x, Hq)
     out = (gates["ball"] * out_ball.astype(jnp.float32)

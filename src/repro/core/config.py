@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,11 +28,47 @@ class BSAConfig:
     local_window: int = 0           # sliding-window length; 0 ⇒ ball_size
     force_first_block: bool = True  # NSA: always select the initial block
     # --- implementation ---
-    use_kernels: bool = False       # route hot paths through Pallas kernels
-    jnp_chunk_tokens: int = 0       # jnp fallback: query-tile size bounding
+    backend: str = "auto"           # named attention backend (core/backend.py):
+                                    # "jnp" | "pallas" | "interpret" | "auto"
+                                    # (pallas on TPU, jnp elsewhere) | plug-in
+    backend_overrides: tuple = ()   # per-branch redirects, e.g.
+                                    # {"slc": "jnp"} — keys "ball"|"cmp"|"slc"
+                                    # (dict accepted; stored as sorted items)
+    jnp_chunk_tokens: int = 0       # jnp backend: query-tile size bounding
                                     # temp memory (0 = off); kernels ignore it
+    # DEPRECATED: pre-registry boolean.  Constructing with use_kernels=True/
+    # False still works (maps to backend="pallas"/"jnp" + DeprecationWarning);
+    # the stored field is normalised back to None so dataclasses.replace()
+    # on other fields neither re-warns nor clobbers an explicit backend.
+    use_kernels: bool | None = None
 
     def __post_init__(self):
+        if isinstance(self.backend_overrides, dict):
+            object.__setattr__(self, "backend_overrides",
+                               tuple(sorted(self.backend_overrides.items())))
+        for branch, name in self.backend_overrides:
+            if branch not in ("ball", "cmp", "slc"):
+                raise ValueError(f"backend_overrides key {branch!r} invalid "
+                                 "(must be 'ball', 'cmp' or 'slc'; 'ball' also "
+                                 "covers the causal local-window branch)")
+            if not isinstance(name, str):
+                raise ValueError(f"backend_overrides[{branch!r}] must be a "
+                                 f"backend NAME, got {type(name).__name__}")
+        if self.use_kernels is not None:
+            mapped = "pallas" if self.use_kernels else "jnp"
+            note = ""
+            if self.backend not in ("auto", mapped):
+                # backend can't distinguish "explicitly passed" from "stored
+                # by an earlier shim mapping", so the deprecated flag always
+                # wins — but never silently.
+                note = (f" (overriding backend={self.backend!r}; drop "
+                        "use_kernels to keep an explicit backend)")
+            warnings.warn(
+                "BSAConfig(use_kernels=...) is deprecated; use "
+                f"backend={mapped!r} — see repro.core.backend{note}",
+                DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "backend", mapped)
+            object.__setattr__(self, "use_kernels", None)
         if self.ball_size & (self.ball_size - 1):
             raise ValueError("ball_size must be a power of two")
         if self.slc_block != self.cmp_block:

@@ -7,34 +7,38 @@ information propagates through pooled ball centroids rather than through
 sparse global branches (BSA's advantage is exactly that it avoids this
 progressive fidelity loss).
 
-We implement it as an attention *backend* with the same signature as BSA so
+We implement it as an attention mechanism with the same signature as BSA so
 the benchmark harness can swap mechanisms:  per layer, the attention is BTA
 at a layer-dependent coarsening level: features are mean-pooled by 2^level
 within the ball order, BTA runs on the pooled sequence, and outputs are
-un-pooled (nearest-neighbor upsample) back to full resolution.
+un-pooled (nearest-neighbor upsample) back to full resolution.  Execution
+routes through the named attention-backend registry (``core/backend.py``).
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.bsa import ball_attention_ref
+from repro.core.backend import resolve_backend
 from repro.core.branches import repeat_kv
 
 __all__ = ["erwin_attention"]
 
 
 def erwin_attention(q, k, v, *, ball_size: int, level: int = 0,
-                    mask=None, use_kernels: bool = False):
+                    mask=None, backend=None):
     """BTA at coarsening ``level`` (0 = leaf balls, paper's BTA).
 
     q: (B,N,Hq,D); k,v: (B,N,Hkv,D).  For level>0, q/k/v are mean-pooled by
     s=2^level along the sequence, attended within balls of ``ball_size``
     (so the receptive field covers s·ball_size leaf tokens), and the output
-    is repeated s× (Erwin's coarsen/refine with skip handled by caller)."""
+    is repeated s× (Erwin's coarsen/refine with skip handled by caller).
+    ``backend`` names an attention backend (or passes a Backend object);
+    None resolves via the usual precedence chain (default "auto")."""
     B, N, Hq, D = q.shape
     rep = Hq // k.shape[2]
     kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
+    bk = resolve_backend(backend)
     s = 1 << level
     if s > 1:
         assert N % (s * ball_size) == 0, "sequence must cover coarse balls"
@@ -44,18 +48,10 @@ def erwin_attention(q, k, v, *, ball_size: int, level: int = 0,
         mp = None
         if mask is not None:
             mp = mask.reshape(B, N // s, s).any(-1)
-        if use_kernels:
-            from repro.kernels import ops as kops
-            outp = kops.ball_attention(qp, kp, vp, mp, ball_size)
-        else:
-            outp = ball_attention_ref(qp, kp, vp, mp, ball_size)
+        outp = bk.ball(qp, kp, vp, mp, ball_size=ball_size)
         out = jnp.repeat(outp, s, axis=1)
     else:
-        if use_kernels:
-            from repro.kernels import ops as kops
-            out = kops.ball_attention(q, kf, vf, mask, ball_size)
-        else:
-            out = ball_attention_ref(q, kf, vf, mask, ball_size)
+        out = bk.ball(q, kf, vf, mask, ball_size=ball_size)
     if mask is not None:
         out = jnp.where(mask[:, :, None, None], out, jnp.zeros((), out.dtype))
     return out

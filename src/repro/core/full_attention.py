@@ -4,32 +4,21 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.branches import mask_to_bias, repeat_kv, sdpa
+from repro.core.backend import resolve_backend
+from repro.core.branches import repeat_kv
 
 __all__ = ["full_attention"]
 
 
 def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                    mask: jnp.ndarray | None = None, causal: bool = False,
-                   use_kernels: bool = False) -> jnp.ndarray:
-    """q: (B,N,Hq,D); k,v: (B,L,Hkv,D); mask: (B,L) key validity."""
-    B, N, Hq, D = q.shape
-    L = k.shape[1]
-    rep = Hq // k.shape[2]
+                   backend=None) -> jnp.ndarray:
+    """q: (B,N,Hq,D); k,v: (B,L,Hkv,D); mask: (B,L) key validity.
+
+    ``backend`` names an attention backend (or passes a Backend object);
+    None resolves via the usual precedence chain (default "auto").
+    """
+    rep = q.shape[2] // k.shape[2]
     kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
-
-    if use_kernels:
-        from repro.kernels import ops as kops
-        assert L == N or not causal, "kernel path assumes aligned q/k for causal"
-        return kops.flash_attention(q, kf, vf, key_valid=mask, causal=causal)
-
-    bias = jnp.zeros((1, 1, 1, L), jnp.float32)
-    if mask is not None:
-        bias = bias + mask_to_bias(mask[:, None, None, :])
-    if causal:
-        qi = jnp.arange(N)[:, None] + (L - N)      # align ends (cache decoding)
-        ki = jnp.arange(L)[None, :]
-        bias = bias + mask_to_bias((ki <= qi)[None, None])
-    out = sdpa(q.transpose(0, 2, 1, 3), kf.transpose(0, 2, 1, 3),
-               vf.transpose(0, 2, 1, 3), bias)
-    return out.transpose(0, 2, 1, 3)
+    bk = resolve_backend(backend)
+    return bk.flash(q, kf, vf, key_valid=mask, causal=causal)

@@ -29,10 +29,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import resolve_branch_backends
 from repro.core.branches import (
     NEG_INF,
     block_validity,
-    chunked_q_attention,
     gate_values,
     gates_init,
     mask_to_bias,
@@ -40,7 +40,6 @@ from repro.core.branches import (
     phi_init,
     repeat_kv,
     sdpa,
-    selection_attend,
 )
 from repro.core.config import BSAConfig
 
@@ -117,16 +116,11 @@ def local_window_attention_ref(q, k, v, window: int, mask=None,
     return out.transpose(0, 1, 3, 2, 4).reshape(B, N, H, D)
 
 
-def _local_branch(q, k, v, mask, cfg: BSAConfig):
+def _local_branch(q, k, v, mask, cfg: BSAConfig, backend):
     rep = q.shape[2] // k.shape[2]
     kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-        return kops.local_window_attention(q, kf, vf, cfg.effective_local_window,
-                                           mask=mask)
-    w = cfg.effective_local_window
-    cb = max(cfg.jnp_chunk_tokens // w, 1) if cfg.jnp_chunk_tokens else 0
-    return local_window_attention_ref(q, kf, vf, w, mask=mask, chunk_blocks=cb)
+    return backend.local_window(q, kf, vf, window=cfg.effective_local_window,
+                                mask=mask, chunk_tokens=cfg.jnp_chunk_tokens)
 
 
 # ---------------------------------------------------------------------------
@@ -142,36 +136,24 @@ def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
     Hkv = k.shape[2]
     rep = Hq // Hkv
     ell = cfg.cmp_block
-    nb = N // ell
 
-    out_local = _local_branch(q, k, v, mask, cfg)
+    bk = resolve_branch_backends(cfg)
+    out_local = _local_branch(q, k, v, mask, cfg, bk["ball"])
 
     # --- compression ---
     k_cmp = phi_apply(params["phi_k"], k, mask, cfg)                # (B,NB,Hkv,D)
     v_cmp = phi_apply(params["phi_v"], v, mask, cfg)
     blk_valid = block_validity(mask, B, N, ell)
-    blk_end = jnp.arange(nb) * ell + (ell - 1)                      # last token of block
-    t = jnp.arange(N)
-    causal_blk = blk_end[None, :] < t[:, None]                      # (N, NB)
-    cmp_valid = blk_valid[:, None, None, :] & causal_blk[None, :, None, :]
     kf, vf = repeat_kv(k_cmp, rep), repeat_kv(v_cmp, rep)
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-        # block-causal mask is generated in-kernel (never materialised)
-        out_cmp = kops.flash_attention(q, kf, vf, key_valid=blk_valid,
-                                       block_causal=True, ell=ell)
-    elif cfg.jnp_chunk_tokens:
-        out_cmp = chunked_q_attention(q, kf, vf, key_valid=blk_valid,
-                                      block_causal_ell=ell,
-                                      chunk=cfg.jnp_chunk_tokens)
-    else:
-        bias = mask_to_bias(cmp_valid)                              # (B,N,1,NB)
-        out_cmp = sdpa(q.transpose(0, 2, 1, 3), kf.transpose(0, 2, 1, 3),
-                       vf.transpose(0, 2, 1, 3),
-                       bias.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    # block-causal rule (query t sees coarse key j iff block j ends before t)
+    # is generated by the backend — in-kernel on pallas, bias on jnp
+    out_cmp = bk["cmp"].flash(q, kf, vf, key_valid=blk_valid,
+                              block_causal=True, ell=ell,
+                              chunk_tokens=cfg.jnp_chunk_tokens)
 
     # --- selection ---
-    out_slc, top_idx = _causal_selection(params, q, k, v, k_cmp, blk_valid, mask, cfg)
+    out_slc, top_idx = _causal_selection(params, q, k, v, k_cmp, blk_valid,
+                                         mask, cfg, bk["slc"])
 
     gates = gate_values(params["gates"], cfg, x, Hq)
     out = (gates["ball"] * out_local.astype(jnp.float32)
@@ -186,7 +168,8 @@ def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
     return out
 
 
-def _causal_selection(params, q, k, v, k_cmp, blk_valid, mask, cfg: BSAConfig):
+def _causal_selection(params, q, k, v, k_cmp, blk_valid, mask, cfg: BSAConfig,
+                      backend):
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
     rep = Hq // Hkv
@@ -233,12 +216,9 @@ def _causal_selection(params, q, k, v, k_cmp, blk_valid, mask, cfg: BSAConfig):
     sel_valid = top_vals > NEG_INF / 2
 
     # gather & attend (strictly-past blocks ⇒ no intra-block causal mask)
-    if cfg.use_kernels:
-        from repro.kernels import ops as kops
-        out = kops.selection_attention(q, k, v, top_idx, sel_valid, mask,
-                                       block_size=ell, group_size=N // G)
-    else:
-        out = selection_attend(q, k, v, top_idx, sel_valid, mask, cfg)
+    out = backend.selection(q, k, v, top_idx, sel_valid, mask,
+                            block_size=ell, group_size=N // G,
+                            chunk_tokens=cfg.jnp_chunk_tokens)
     return out, top_idx
 
 

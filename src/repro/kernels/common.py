@@ -19,7 +19,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.numerics import NEG_INF  # noqa: F401 — shared constant, re-exported
+                                    # for the kernel modules
 
 # Sentinel logsumexp for query rows with NO valid key (fully-masked ball /
 # all-invalid selection group): exp(s − LSE_EMPTY) underflows to exactly 0

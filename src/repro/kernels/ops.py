@@ -1,7 +1,8 @@
 """jit'd wrappers: layout transforms between core tensor convention
 (B, N, H, D) and the kernels' flattened (B·H, N, D) / blocked layouts.
 
-These are the entry points ``repro.core`` uses when ``cfg.use_kernels``.
+These are the entry points the "pallas" / "interpret" attention backends
+(``repro.core.backend.PallasBackend``) dispatch to.
 
 Shape/dtype contract (shared by all four wrappers):
 
@@ -26,9 +27,10 @@ packed batch of variable-size samples — one mask row per sample, produced by
 All wrappers are differentiable in q/k/v: the kernel calls carry
 ``jax.custom_vjp`` fused backward passes (see each kernel module), and the
 layout transforms here are plain jnp ops, so ``jax.grad`` through
-``bsa_attention`` / ``nsa_causal_attention`` works with ``use_kernels=True``.
+``bsa_attention`` / ``nsa_causal_attention`` works on the kernel backends.
 Mask-derived biases are non-differentiable by construction (their cotangent
-is dropped in the kernel VJPs).
+is dropped in the kernel VJPs).  Every wrapper takes ``interpret`` (None =
+auto-detect, True = force Pallas interpret mode — the "interpret" backend).
 """
 
 from __future__ import annotations
@@ -36,10 +38,10 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels.bta import ball_attention_kernel_call
-from repro.kernels.common import NEG_INF
 from repro.kernels.flash import flash_attention_kernel_call
 from repro.kernels.local import local_window_kernel_call
 from repro.kernels.selection import selection_attention_kernel_call
+from repro.numerics import NEG_INF, key_padding_bias
 
 __all__ = ["ball_attention", "flash_attention", "local_window_attention",
            "selection_attention"]
@@ -56,30 +58,27 @@ def _from_bh(t, B, H):
     return t.reshape(B, H, N, D).transpose(0, 2, 1, 3)
 
 
-def _key_bias(mask, B, L):
-    if mask is None:
-        return jnp.zeros((B, L), jnp.float32)
-    return jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
-
-
-def ball_attention(q, k, v, mask, ball_size: int):
+def ball_attention(q, k, v, mask, ball_size: int, *,
+                   interpret: bool | None = None):
     """Ball-Tree Attention: full attention inside each contiguous ball.
 
     q, k, v: (B, N, H, D) EQUAL head counts (repeat KV first for GQA);
     ``mask``: (B, N) bool (True = real) or None — masks keys in logit space,
     one row per sample of a packed ragged batch.  ``ball_size`` must divide
-    N.  Returns (B, N, H, D).  Differentiable in q, k, v.
+    N.  ``interpret`` forces Pallas interpret mode (None = auto-detect).
+    Returns (B, N, H, D).  Differentiable in q, k, v.
     """
     B, N, H, D = q.shape
     out = ball_attention_kernel_call(
-        _to_bh(q), _to_bh(k), _to_bh(v), _key_bias(mask, B, N),
-        ball_size=ball_size, n_heads=H)
+        _to_bh(q), _to_bh(k), _to_bh(v), key_padding_bias(mask, B, N),
+        ball_size=ball_size, n_heads=H, interpret=interpret)
     return _from_bh(out, B, H)
 
 
 def flash_attention(q, k, v, *, key_valid=None, causal=False,
                     block_causal=False, ell=1, bias=None,
-                    tq: int = 256, tk: int = 256):
+                    tq: int = 256, tk: int = 256,
+                    interpret: bool | None = None):
     """Streaming-softmax attention of q vs an arbitrary-length K/V.
 
     q: (B, N, H, D); k, v: (B, L, H, D) equal head counts (L may differ from
@@ -96,16 +95,18 @@ def flash_attention(q, k, v, *, key_valid=None, causal=False,
     Differentiable in q, k, v."""
     B, N, H, D = q.shape
     L = k.shape[1]
-    kb = _key_bias(key_valid, B, L)
+    kb = key_padding_bias(key_valid, B, L)
     if bias is not None:
         kb = kb + bias.reshape(B, L).astype(jnp.float32)
     out = flash_attention_kernel_call(
         _to_bh(q), _to_bh(k), _to_bh(v), kb, n_heads=H,
-        causal=causal, block_causal=block_causal, ell=ell, tq=tq, tk=tk)
+        causal=causal, block_causal=block_causal, ell=ell, tq=tq, tk=tk,
+        interpret=interpret)
     return _from_bh(out, B, H)
 
 
-def local_window_attention(q, k, v, window: int, mask=None):
+def local_window_attention(q, k, v, window: int, mask=None, *,
+                           interpret: bool | None = None):
     """Blocked local causal attention (the LM 'ball' branch).
 
     q, k, v: (B, N, H, D) equal head counts; query block i (size ``window``)
@@ -115,13 +116,14 @@ def local_window_attention(q, k, v, window: int, mask=None):
     (B, N, H, D).  Differentiable in q, k, v."""
     B, N, H, D = q.shape
     out = local_window_kernel_call(
-        _to_bh(q), _to_bh(k), _to_bh(v), _key_bias(mask, B, N),
-        window=window, n_heads=H)
+        _to_bh(q), _to_bh(k), _to_bh(v), key_padding_bias(mask, B, N),
+        window=window, n_heads=H, interpret=interpret)
     return _from_bh(out, B, H)
 
 
 def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
-                        block_size: int, group_size: int):
+                        block_size: int, group_size: int,
+                        interpret: bool | None = None):
     """Group-selected sparse attention via the scalar-prefetch kernel.
 
     q: (B, N, Hq, D); k, v: (B, N, Hkv, D) with Hq = Hkv·rep (GQA — the only
@@ -155,7 +157,8 @@ def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
     else:
         tok_bias = jnp.where(mask.reshape(B, nb, ell), 0.0, NEG_INF).astype(jnp.float32)
 
-    out = selection_attention_kernel_call(qg, kb, vb, idx, tok_bias)
+    out = selection_attention_kernel_call(qg, kb, vb, idx, tok_bias,
+                                          interpret=interpret)
     return (out.reshape(B, Hkv, G, g, rep, D)
                .transpose(0, 2, 3, 1, 4, 5)
                .reshape(B, N, Hq, D))

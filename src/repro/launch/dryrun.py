@@ -57,8 +57,12 @@ def shape_rules(mcfg, shape, mesh):
     return rules, seq_parallel
 
 
-def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               backend: str | None = None):
     mcfg = get_config(arch)
+    if backend:
+        import dataclasses
+        mcfg = mcfg.scaled(bsa=dataclasses.replace(mcfg.bsa, backend=backend))
     shape = SHAPES[shape_name]
     api = model_api(mcfg)
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -99,7 +103,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
-             force: bool = False) -> dict:
+             force: bool = False, backend: str | None = None) -> dict:
     mesh_name = "pod2" if multi_pod else "pod1"
     out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
     if out_path.exists() and not force:
@@ -108,7 +112,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False}
     t0 = time.time()
     try:
-        lowered, mesh = lower_cell(arch, shape_name, multi_pod)
+        lowered, mesh = lower_cell(arch, shape_name, multi_pod, backend=backend)
         t1 = time.time()
         compiled = lowered.compile()
         t2 = time.time()
@@ -182,6 +186,9 @@ def main():
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    help="attention backend override for every cell: jnp | "
+                         "pallas | interpret | auto (default: config)")
     args = ap.parse_args()
 
     archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
@@ -193,7 +200,8 @@ def main():
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                rec = run_cell(arch, shape, mp, out_dir, force=args.force)
+                rec = run_cell(arch, shape, mp, out_dir, force=args.force,
+                               backend=args.backend)
                 n_ok += bool(rec.get("ok"))
                 n_fail += not rec.get("ok")
                 jax.clear_caches()  # bound host RAM across the 80-cell matrix

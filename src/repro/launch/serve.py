@@ -26,11 +26,17 @@ def main():
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    help="attention backend: jnp | pallas | interpret | auto "
+                         "| any registered plug-in (default: config)")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch)
     if args.smoke:
         mcfg = smoke_config(mcfg)
+    if args.backend:
+        import dataclasses
+        mcfg = mcfg.scaled(bsa=dataclasses.replace(mcfg.bsa, backend=args.backend))
     api = model_api(mcfg)
     params = api.init(jax.random.PRNGKey(0))
     eng = ServingEngine(api, params, batch_slots=args.slots,

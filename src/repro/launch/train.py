@@ -31,6 +31,9 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--backend", default=None,
+                    help="attention backend: jnp | pallas | interpret | auto "
+                         "| any registered plug-in (default: config)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--mesh", default="", help="e.g. 2x4 → (data=2, model=4)")
     ap.add_argument("--distributed", action="store_true",
@@ -43,6 +46,9 @@ def main():
     mcfg = get_config(args.arch)
     if args.smoke:
         mcfg = smoke_config(mcfg)
+    if args.backend:
+        import dataclasses
+        mcfg = mcfg.scaled(bsa=dataclasses.replace(mcfg.bsa, backend=args.backend))
     api = model_api(mcfg)
 
     mesh = None

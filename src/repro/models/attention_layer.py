@@ -1,9 +1,12 @@
-"""Attention layer: QKV/O projections + RoPE + attention-backend dispatch.
+"""Attention layer: QKV/O projections + RoPE + attention dispatch.
 
-One layer serves all model families; the backend (``bsa`` | ``full`` |
-``erwin``) and causality are chosen by the caller.  Decode steps share the
-same projections and route through ``core.nsa_causal_decode`` (sparse) or a
-dense cached path (full attention).
+One layer serves all model families; the attention MECHANISM (``bsa`` |
+``full`` | ``erwin``, ``mcfg.attention``) and causality are chosen by the
+caller, while the execution BACKEND (jnp / pallas / interpret / plug-in,
+``mcfg.bsa.backend`` — see ``repro.core.backend``) is orthogonal and applies
+to every mechanism.  Decode steps share the same projections and route
+through ``core.nsa_causal_decode`` (sparse) or a dense cached path (full
+attention).
 """
 
 from __future__ import annotations
@@ -70,10 +73,10 @@ def attention_layer_apply(p, x, *, mcfg, causal: bool, mask=None,
     elif mcfg.attention == "erwin":
         out = erwin_attention(q, k, v, ball_size=mcfg.bsa.ball_size,
                               level=erwin_level, mask=mask,
-                              use_kernels=mcfg.bsa.use_kernels)
+                              backend=mcfg.bsa.backend)
     else:
         out = full_attention(q, k, v, mask=mask, causal=causal,
-                             use_kernels=mcfg.bsa.use_kernels)
+                             backend=mcfg.bsa.backend)
     out = out.reshape(B, N, mcfg.n_heads * mcfg.resolved_head_dim)
     return dense(p["wo"], out)
 
@@ -85,7 +88,7 @@ def cross_attention_apply(p, x, memory_kv, *, mcfg, mem_mask=None):
     q = dense(p["wq"], x).reshape(B, N, mcfg.n_heads, hd)
     mk, mv = memory_kv
     out = full_attention(q, mk, mv, mask=mem_mask, causal=False,
-                         use_kernels=mcfg.bsa.use_kernels)
+                         backend=mcfg.bsa.backend)
     return dense(p["wo"], out.reshape(B, N, mcfg.n_heads * hd))
 
 

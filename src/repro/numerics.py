@@ -1,0 +1,36 @@
+"""Shared numeric constants and mask→logit-bias helpers.
+
+Single source of truth for the logit-space masking convention used by BOTH
+the pure-jnp reference paths (``repro.core``) and the Pallas kernels
+(``repro.kernels``): a masked key contributes an additive fp32 bias of
+``NEG_INF`` (−1e30) to its logits, softmax statistics guard at
+``NEG_INF / 2``, and rows whose keys are all masked produce exact zeros.
+Keeping one definition guarantees the two execution paths agree bit-for-bit
+on what "masked" means — a drifted constant here shows up as gradient-parity
+failures, not crashes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["NEG_INF", "mask_to_bias", "key_padding_bias"]
+
+NEG_INF = -1e30
+
+
+def mask_to_bias(valid: jnp.ndarray) -> jnp.ndarray:
+    """bool (… L) -> additive fp32 bias 0 / NEG_INF."""
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def key_padding_bias(mask: jnp.ndarray | None, batch: int, length: int) -> jnp.ndarray:
+    """(B, L) bool key-validity (or None = all valid) -> (B, L) fp32 bias.
+
+    The dense form every kernel entry point consumes: None materialises as
+    zeros so kernel signatures stay mask-free (one code path, no tracing
+    forks on mask presence).
+    """
+    if mask is None:
+        return jnp.zeros((batch, length), jnp.float32)
+    return mask_to_bias(mask)

@@ -20,25 +20,38 @@ stays logarithmic in the size range.
 
 from __future__ import annotations
 
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backend import use_backend
 from repro.core.balltree import (bucket_length, pack_ragged,
                                  build_balltree_permutations, unpack_ragged)
 from repro.launch.steps import make_serve_step
 
 
+def _backend_scope(name: str | None):
+    """Fresh context forcing attention backend ``name`` (None = config's).
+
+    Backend resolution is TRACE-time, so wrapping every jitted call is
+    enough: the first call bakes the backend into the compiled step and
+    later calls replay it."""
+    return use_backend(name) if name else contextlib.nullcontext()
+
+
 class ServingEngine:
     def __init__(self, api, params, *, batch_slots: int, max_len: int,
-                 cache_dtype=jnp.float32, temperature: float = 0.0, seed: int = 0):
+                 cache_dtype=jnp.float32, temperature: float = 0.0, seed: int = 0,
+                 backend: str | None = None):
         self.api = api
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
         self.temperature = temperature
+        self.backend = backend          # attention-backend override (by name)
         self._rng = jax.random.PRNGKey(seed)
         self.caches = api.cache_init(batch_slots, max_len, cache_dtype)
         self._step = jax.jit(make_serve_step(api))
@@ -53,9 +66,10 @@ class ServingEngine:
         Returns last logits' argmax (first generated token)."""
         assert prompts.shape[0] == self.B
         nxt = None
-        for t in range(prompts.shape[1]):
-            tok = jnp.asarray(prompts[:, t], jnp.int32)
-            nxt, logits, self.caches = self._step(self.params, self.caches, tok)
+        with _backend_scope(self.backend):
+            for t in range(prompts.shape[1]):
+                tok = jnp.asarray(prompts[:, t], jnp.int32)
+                nxt, logits, self.caches = self._step(self.params, self.caches, tok)
         return np.asarray(nxt)
 
     def _sample(self, logits):
@@ -70,10 +84,11 @@ class ServingEngine:
         out = [first]
         tok = jnp.asarray(first)
         t0 = time.time()
-        for _ in range(n_tokens - 1):
-            nxt, logits, self.caches = self._step(self.params, self.caches, tok)
-            tok = self._sample(logits)
-            out.append(np.asarray(tok))
+        with _backend_scope(self.backend):
+            for _ in range(n_tokens - 1):
+                nxt, logits, self.caches = self._step(self.params, self.caches, tok)
+                tok = self._sample(logits)
+                out.append(np.asarray(tok))
         jax.block_until_ready(tok)
         self.decode_time += time.time() - t0
         self.tokens_generated += self.B * n_tokens
@@ -101,11 +116,12 @@ class GeometryEngine:
     """
 
     def __init__(self, api, params, *, batch_slots: int = 8,
-                 pad_to: int | None = None):
+                 pad_to: int | None = None, backend: str | None = None):
         self.api = api
         self.params = params
         self.batch_slots = batch_slots
         self.pad_to = pad_to
+        self.backend = backend          # attention-backend override (by name)
         self.ball_size = api.mcfg.bsa.ball_size
         self._fwd = jax.jit(api.forward)
         self.clouds_served = 0
@@ -142,8 +158,9 @@ class GeometryEngine:
         feats, mask = pack_ragged(ordered, self.ball_size, pad_to=target)
         if pad_slots > 0:
             mask[len(chunk):] = False
-        pred = self._fwd(self.params, {"feats": jnp.asarray(feats),
-                                       "mask": jnp.asarray(mask)})
+        with _backend_scope(self.backend):
+            pred = self._fwd(self.params, {"feats": jnp.asarray(feats),
+                                           "mask": jnp.asarray(mask)})
         per_cloud = unpack_ragged(np.asarray(pred), mask)[:len(chunk)]
         out = []
         for rows, perm in zip(per_cloud, perms):

@@ -1,0 +1,296 @@
+"""Attention-backend registry tests (core/backend.py).
+
+Covers the named-backend API end-to-end:
+
+  * forward + gradient parity of every built-in backend against the "jnp"
+    reference, for all four attention entry points (bsa / nsa-causal /
+    erwin / full);
+  * resolution precedence: config < ``use_backend(...)`` context < the
+    ``REPRO_ATTENTION_BACKEND`` environment variable;
+  * per-branch overrides (``backend_overrides={"slc": ...}``);
+  * the plug-in path: a test-only registered counting backend is picked up
+    by name and sees exactly the expected per-branch calls;
+  * the ``use_kernels`` deprecation shim.
+
+Backends are trace-time state, so every test builds fresh (unjitted or
+freshly-jitted) computations.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BSAConfig, bsa_attention, bsa_init, erwin_attention,
+                        full_attention, nsa_causal_attention, nsa_init)
+from repro.core import backend as backend_mod
+from repro.core.backend import (JnpBackend, get_backend, list_backends,
+                                register_backend, resolve_backend_name,
+                                use_backend)
+
+KEY = jax.random.PRNGKey(42)
+TOL = dict(atol=1e-3, rtol=1e-3)
+CFG_KW = dict(ball_size=32, local_window=32, cmp_block=8, slc_block=8,
+              top_k=2, group_size=8)
+# "pallas" auto-detects interpret mode on CPU; "interpret" forces it; "auto"
+# resolves to "jnp" off-TPU — all are CPU-runnable, so sweep everything.
+BACKENDS = ["jnp", "pallas", "interpret", "auto"]
+
+
+@pytest.fixture(autouse=True)
+def _no_env_override(monkeypatch):
+    """These tests control resolution explicitly — neutralise CI env legs."""
+    monkeypatch.delenv(backend_mod.ENV_VAR, raising=False)
+
+
+def _qkv(B=2, N=64, Hq=4, Hkv=2, D=16, masked=True):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, N, Hq, D))
+    k = jax.random.normal(ks[1], (B, N, Hkv, D))
+    v = jax.random.normal(ks[2], (B, N, Hkv, D))
+    mask = jnp.ones((B, N), bool).at[:, -N // 8:].set(False) if masked else None
+    return q, k, v, mask
+
+
+def _close(got, want, **kw):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **(kw or TOL))
+
+
+def _grads_close(got, want):
+    gl, wl = jax.tree.leaves(got), jax.tree.leaves(want)
+    assert len(gl) == len(wl)
+    for g, w in zip(gl, wl):
+        _close(g, w)
+
+
+# ---------------------------------------------------------------------------
+# fwd + grad parity sweep: every backend vs the jnp reference, all four entry
+# points — swapping the backend NAME must change nothing but numerics noise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_bsa_parity(name):
+    q, k, v, mask = _qkv()
+    cfg = BSAConfig(**CFG_KW, backend="jnp")
+    params = bsa_init(jax.random.fold_in(KEY, 1), cfg, n_heads=4, n_kv_heads=2,
+                      head_dim=16, d_model=64)
+
+    def loss(cfg):
+        return lambda p, q, k, v: jnp.sum(
+            bsa_attention(p, q, k, v, cfg=cfg, mask=mask) ** 2)
+
+    cfg_b = dataclasses.replace(cfg, backend=name)
+    _close(bsa_attention(params, q, k, v, cfg=cfg_b, mask=mask),
+           bsa_attention(params, q, k, v, cfg=cfg, mask=mask))
+    got = jax.grad(loss(cfg_b), argnums=(0, 1, 2, 3))(params, q, k, v)
+    want = jax.grad(loss(cfg), argnums=(0, 1, 2, 3))(params, q, k, v)
+    _grads_close(got, want)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_nsa_causal_parity(name):
+    q, k, v, _ = _qkv(masked=False)
+    cfg = BSAConfig(**CFG_KW, backend="jnp")
+    params = nsa_init(jax.random.fold_in(KEY, 2), cfg, n_heads=4, n_kv_heads=2,
+                      head_dim=16, d_model=64)
+
+    def loss(cfg):
+        return lambda p, q, k, v: jnp.sum(
+            nsa_causal_attention(p, q, k, v, cfg=cfg) ** 2)
+
+    cfg_b = dataclasses.replace(cfg, backend=name)
+    _close(nsa_causal_attention(params, q, k, v, cfg=cfg_b),
+           nsa_causal_attention(params, q, k, v, cfg=cfg))
+    got = jax.grad(loss(cfg_b), argnums=(0, 1, 2, 3))(params, q, k, v)
+    want = jax.grad(loss(cfg), argnums=(0, 1, 2, 3))(params, q, k, v)
+    _grads_close(got, want)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+@pytest.mark.parametrize("level", [0, 1])
+def test_erwin_parity(name, level):
+    q, k, v, mask = _qkv()
+
+    def loss(backend):
+        return lambda q, k, v: jnp.sum(erwin_attention(
+            q, k, v, ball_size=32, level=level, mask=mask, backend=backend) ** 2)
+
+    _close(erwin_attention(q, k, v, ball_size=32, level=level, mask=mask,
+                           backend=name),
+           erwin_attention(q, k, v, ball_size=32, level=level, mask=mask,
+                           backend="jnp"))
+    got = jax.grad(loss(name), argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(loss("jnp"), argnums=(0, 1, 2))(q, k, v)
+    _grads_close(got, want)
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+@pytest.mark.parametrize("causal", [False, True])
+def test_full_attention_parity(name, causal):
+    q, k, v, mask = _qkv()
+
+    def loss(backend):
+        return lambda q, k, v: jnp.sum(full_attention(
+            q, k, v, mask=mask, causal=causal, backend=backend) ** 2)
+
+    _close(full_attention(q, k, v, mask=mask, causal=causal, backend=name),
+           full_attention(q, k, v, mask=mask, causal=causal, backend="jnp"))
+    got = jax.grad(loss(name), argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(loss("jnp"), argnums=(0, 1, 2))(q, k, v)
+    _grads_close(got, want)
+
+
+# ---------------------------------------------------------------------------
+# registry + resolution precedence
+# ---------------------------------------------------------------------------
+
+def test_builtins_registered():
+    names = list_backends()
+    for n in ("jnp", "pallas", "interpret"):
+        assert n in names
+    expect = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert get_backend("auto") is get_backend(expect)
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(KeyError, match="unknown attention backend"):
+        get_backend("no-such-backend")
+    cfg = BSAConfig(**CFG_KW, backend="no-such-backend")   # lazy validation
+    q, k, v, mask = _qkv(B=1)
+    params = bsa_init(KEY, cfg, n_heads=4, n_kv_heads=2, head_dim=16, d_model=64)
+    with pytest.raises(KeyError, match="no-such-backend"):
+        bsa_attention(params, q, k, v, cfg=cfg, mask=mask)
+
+
+def test_invalid_override_key_rejected():
+    with pytest.raises(ValueError, match="backend_overrides key"):
+        BSAConfig(**CFG_KW, backend_overrides={"flash": "jnp"})
+
+
+def test_resolution_precedence(monkeypatch):
+    # config alone
+    assert resolve_backend_name("jnp") == "jnp"
+    assert resolve_backend_name(None) == "auto"
+    # context beats config
+    with use_backend("interpret"):
+        assert resolve_backend_name("jnp") == "interpret"
+        with use_backend("pallas"):                        # nests, innermost wins
+            assert resolve_backend_name("jnp") == "pallas"
+        assert resolve_backend_name("jnp") == "interpret"
+    # env beats both
+    monkeypatch.setenv(backend_mod.ENV_VAR, "jnp")
+    with use_backend("pallas"):
+        assert resolve_backend_name("interpret") == "jnp"
+
+
+def test_env_overrides_branch_overrides(monkeypatch):
+    cfg = BSAConfig(**CFG_KW, backend="pallas",
+                    backend_overrides={"slc": "interpret"})
+    monkeypatch.setenv(backend_mod.ENV_VAR, "jnp")
+    resolved = backend_mod.resolve_branch_backends(cfg)
+    assert all(resolved[b] is get_backend("jnp") for b in ("ball", "cmp", "slc"))
+
+
+# ---------------------------------------------------------------------------
+# plug-in path: a registered counting backend is reachable by NAME from the
+# config (base and per-branch) and sees the expected calls
+# ---------------------------------------------------------------------------
+
+class CountingBackend:
+    """Delegates to the jnp reference, counting trace-time op calls."""
+
+    name = "counting-test"
+
+    def __init__(self):
+        self._inner = JnpBackend()
+        self.calls = {"ball": 0, "flash": 0, "local_window": 0, "selection": 0}
+
+    def ball(self, *a, **kw):
+        self.calls["ball"] += 1
+        return self._inner.ball(*a, **kw)
+
+    def flash(self, *a, **kw):
+        self.calls["flash"] += 1
+        return self._inner.flash(*a, **kw)
+
+    def local_window(self, *a, **kw):
+        self.calls["local_window"] += 1
+        return self._inner.local_window(*a, **kw)
+
+    def selection(self, *a, **kw):
+        self.calls["selection"] += 1
+        return self._inner.selection(*a, **kw)
+
+
+@pytest.fixture
+def counting():
+    bk = CountingBackend()
+    register_backend("counting-test", bk, overwrite=True)
+    return bk
+
+
+def test_registered_plugin_end_to_end(counting):
+    q, k, v, mask = _qkv()
+    cfg = BSAConfig(**CFG_KW, backend="counting-test")
+    params = bsa_init(jax.random.fold_in(KEY, 1), cfg, n_heads=4, n_kv_heads=2,
+                      head_dim=16, d_model=64)
+    out = bsa_attention(params, q, k, v, cfg=cfg, mask=mask)
+    assert counting.calls == {"ball": 1, "flash": 1, "local_window": 0,
+                              "selection": 1}
+    _close(out, bsa_attention(params, q, k, v,
+                              cfg=dataclasses.replace(cfg, backend="jnp"),
+                              mask=mask), atol=1e-6, rtol=1e-6)
+    # the causal variant routes its local branch through the "ball" slot
+    pn = nsa_init(jax.random.fold_in(KEY, 2), cfg, n_heads=4, n_kv_heads=2,
+                  head_dim=16, d_model=64)
+    nsa_causal_attention(pn, q, k, v, cfg=cfg)
+    assert counting.calls["local_window"] == 1
+
+
+def test_per_branch_override(counting):
+    q, k, v, mask = _qkv()
+    cfg = BSAConfig(**CFG_KW, backend="jnp",
+                    backend_overrides={"slc": "counting-test"})
+    params = bsa_init(jax.random.fold_in(KEY, 1), cfg, n_heads=4, n_kv_heads=2,
+                      head_dim=16, d_model=64)
+    out = bsa_attention(params, q, k, v, cfg=cfg, mask=mask)
+    assert counting.calls == {"ball": 0, "flash": 0, "local_window": 0,
+                              "selection": 1}
+    _close(out, bsa_attention(params, q, k, v,
+                              cfg=dataclasses.replace(
+                                  cfg, backend_overrides=()), mask=mask),
+           atol=1e-6, rtol=1e-6)
+
+
+def test_register_rejects_bad_plugins():
+    with pytest.raises(ValueError, match="reserved"):
+        register_backend("auto", JnpBackend())
+    with pytest.raises(TypeError, match="protocol"):
+        register_backend("broken-test", object())
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("jnp", JnpBackend())
+
+
+# ---------------------------------------------------------------------------
+# use_kernels deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_use_kernels_shim_maps_and_warns():
+    with pytest.warns(DeprecationWarning, match="use_kernels"):
+        cfg = BSAConfig(**CFG_KW, use_kernels=True)
+    assert cfg.backend == "pallas" and cfg.use_kernels is None
+    with pytest.warns(DeprecationWarning):
+        cfg = BSAConfig(**CFG_KW, use_kernels=False)
+    assert cfg.backend == "jnp"
+    # dataclasses.replace on OTHER fields must not re-warn or clobber
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg2 = dataclasses.replace(cfg, top_k=4)
+    assert cfg2.backend == "jnp"
+    with pytest.warns(DeprecationWarning):
+        cfg3 = dataclasses.replace(cfg2, use_kernels=True)
+    assert cfg3.backend == "pallas"

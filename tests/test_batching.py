@@ -25,6 +25,14 @@ from repro.core.nsa_causal import nsa_causal_attention, nsa_init
 KEY = jax.random.PRNGKey(11)
 
 
+@pytest.fixture(autouse=True)
+def _no_env_override(monkeypatch):
+    """The batched==per-sample tests run per NAMED backend (jnp and pallas);
+    a CI matrix leg pinning REPRO_ATTENTION_BACKEND would collapse both
+    parametrisations onto one backend."""
+    monkeypatch.delenv("REPRO_ATTENTION_BACKEND", raising=False)
+
+
 def _cfg(**kw):
     base = dict(ball_size=16, local_window=16, cmp_block=8, slc_block=8,
                 top_k=2, group_size=8)
@@ -105,16 +113,15 @@ def test_dataset_ragged_batches():
 # batched bsa == per-sample loop (fwd + grads, jnp and kernel paths)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("use_kernels", [False, True],
-                         ids=["jnp", "kernels"])
-def test_bsa_batched_equals_per_sample_loop(use_kernels):
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_bsa_batched_equals_per_sample_loop(backend):
     N = 64
     sizes = [64, 40, 24]                    # mixed sizes in one packed batch
-    cfg = _cfg(use_kernels=use_kernels)
+    cfg = _cfg(backend=backend)
     q, k, v, mask = _mixed_batch(sizes, N)
     params = bsa_init(jax.random.fold_in(KEY, 1), cfg, n_heads=4, n_kv_heads=2,
                       head_dim=16, d_model=64)
-    atol = 1e-3 if use_kernels else 1e-5
+    atol = 1e-3 if backend == "pallas" else 1e-5
 
     def loss(p, q, k, v, m):
         return jnp.sum(bsa_attention(p, q, k, v, cfg=cfg, mask=m) ** 2)
@@ -150,17 +157,16 @@ def test_bsa_batched_equals_per_sample_loop(use_kernels):
     np.testing.assert_allclose(np.asarray(out_b[2, 24:]), 0.0, atol=1e-7)
 
 
-@pytest.mark.parametrize("use_kernels", [False, True],
-                         ids=["jnp", "kernels"])
-def test_nsa_causal_batched_equals_per_sample_loop(use_kernels):
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_nsa_causal_batched_equals_per_sample_loop(backend):
     """Same invariant for the causal LM variant (local-window kernel mask)."""
     N = 64
     sizes = [64, 40]
-    cfg = _cfg(use_kernels=use_kernels)
+    cfg = _cfg(backend=backend)
     q, k, v, mask = _mixed_batch(sizes, N)
     params = nsa_init(jax.random.fold_in(KEY, 2), cfg, n_heads=4, n_kv_heads=2,
                       head_dim=16, d_model=64)
-    atol = 1e-3 if use_kernels else 1e-5
+    atol = 1e-3 if backend == "pallas" else 1e-5
     out_b = nsa_causal_attention(params, q, k, v, cfg=cfg, mask=mask)
     for i in range(len(sizes)):
         sl = lambda t: t[i:i + 1]

@@ -3,8 +3,8 @@
 The kernel path carries fused custom_vjp backward passes (FlashAttention-style
 recomputation from logsumexp residuals); these tests assert that dQ/dK/dV —
 and, end-to-end, parameter gradients of ``bsa_attention`` /
-``nsa_causal_attention`` with ``use_kernels=True`` — match the pure-jnp
-reference path to atol 1e-3.  Kernels run under interpret mode on CPU.
+``nsa_causal_attention`` on the ``"pallas"`` backend — match the ``"jnp"``
+reference backend to atol 1e-3.  Kernels run under interpret mode on CPU.
 """
 
 import dataclasses
@@ -21,6 +21,14 @@ from repro.kernels import ops, ref
 
 KEY = jax.random.PRNGKey(123)
 TOL = dict(atol=1e-3, rtol=1e-3)
+
+
+@pytest.fixture(autouse=True)
+def _no_env_override(monkeypatch):
+    """These tests compare NAMED backends (pallas vs jnp); a CI matrix leg
+    pinning REPRO_ATTENTION_BACKEND would collapse both sides to one backend
+    and make the parity assertions vacuous."""
+    monkeypatch.delenv("REPRO_ATTENTION_BACKEND", raising=False)
 
 
 def _assert_grads_close(got, want):
@@ -151,15 +159,15 @@ def test_bsa_attention_grads_kernel_path(masked):
     params = bsa_init(jax.random.fold_in(KEY, 7), cfg, n_heads=Hq,
                       n_kv_heads=Hkv, head_dim=D, d_model=dm)
 
-    def loss(use_kernels):
-        c = dataclasses.replace(cfg, use_kernels=use_kernels)
+    def loss(backend):
+        c = dataclasses.replace(cfg, backend=backend)
 
         def f(params, q, k, v):
             return jnp.sum(bsa_attention(params, q, k, v, cfg=c, mask=mask) * w)
         return f
 
-    got = jax.grad(loss(True), argnums=(0, 1, 2, 3))(params, q, k, v)
-    want = jax.grad(loss(False), argnums=(0, 1, 2, 3))(params, q, k, v)
+    got = jax.grad(loss("pallas"), argnums=(0, 1, 2, 3))(params, q, k, v)
+    want = jax.grad(loss("jnp"), argnums=(0, 1, 2, 3))(params, q, k, v)
     _assert_grads_close(got, want)
 
 
@@ -170,15 +178,15 @@ def test_nsa_causal_attention_grads_kernel_path():
     params = nsa_init(jax.random.fold_in(KEY, 8), cfg, n_heads=Hq,
                       n_kv_heads=Hkv, head_dim=D, d_model=dm)
 
-    def loss(use_kernels):
-        c = dataclasses.replace(cfg, use_kernels=use_kernels)
+    def loss(backend):
+        c = dataclasses.replace(cfg, backend=backend)
 
         def f(params, q, k, v):
             return jnp.sum(nsa_causal_attention(params, q, k, v, cfg=c) * w)
         return f
 
-    got = jax.grad(loss(True), argnums=(0, 1, 2, 3))(params, q, k, v)
-    want = jax.grad(loss(False), argnums=(0, 1, 2, 3))(params, q, k, v)
+    got = jax.grad(loss("pallas"), argnums=(0, 1, 2, 3))(params, q, k, v)
+    want = jax.grad(loss("jnp"), argnums=(0, 1, 2, 3))(params, q, k, v)
     _assert_grads_close(got, want)
 
 
@@ -221,7 +229,7 @@ def test_kernel_train_step_is_jittable():
     """A jitted fwd+bwd step on the kernel path compiles and yields finite grads."""
     B, N, Hq, Hkv, D, dm = 1, 128, 4, 2, 32, 64
     q, k, v, w = _qkvw(B, N, Hq, Hkv, D)
-    cfg = BSAConfig(use_kernels=True, **_E2E_CFG)
+    cfg = BSAConfig(backend="pallas", **_E2E_CFG)
     params = bsa_init(jax.random.fold_in(KEY, 9), cfg, n_heads=Hq,
                       n_kv_heads=Hkv, head_dim=D, d_model=dm)
 
