@@ -144,11 +144,23 @@ def time_kernel_train_step(args) -> None:
     unlocks.  On this CPU container the pallas backend runs under interpret
     mode (set REPRO_PALLAS_INTERPRET=0 on TPU hosts for compiled numbers).
 
+    Also reports PEAK step memory (argument + temp + output − aliased, from
+    the compiled step's memory analysis) — the number the kernel-native GQA
+    path moves, since the rep× ``repeat_kv`` K/V blowup is gone.
+
     With ``--batch B > 1`` the same step is ALSO timed as B sequential
     single-sample calls (the pre-ragged-batching trainer pattern) and both
     are reported as points/sec — the batched-path speedup measurement.
     ``--ragged`` packs a mixed-size batch (per-sample masks) instead of a
     dense one, matching the variable-size geometry pipeline.
+
+    ``--autotune`` enables the tile autotuner (``kernels/tuning.py``): cache
+    misses are measured with timed kernel runs and persisted to the JSON
+    cache ($REPRO_TUNING_CACHE, default ~/.cache/repro/tuning.json); a
+    second run hits the cache and re-measures nothing.  ``--bench-json``
+    writes the measured record; ``--baseline BENCH_perf_iter.json`` compares
+    against a committed record and exits non-zero if throughput regressed
+    more than ``--max-regression`` (CI gate).
 
       PYTHONPATH=src python -m benchmarks.perf_iter --kernel-step \
           --n 256 --batch 8 --heads 4 --kv-heads 2 --head-dim 32 --ragged
@@ -195,6 +207,12 @@ def time_kernel_train_step(args) -> None:
         return out
 
     us = time_fn(run, params, q, k, v, mask, warmup=2, iters=5)
+    try:
+        ma = step.lower(params, q, k, v, mask).compile().memory_analysis()
+        peak_bytes = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                      + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    except Exception:
+        peak_bytes = None
     resolved = resolve_backend_name(backend)     # env/context may override
     if resolved in ("jnp", "interpret"):
         mode = resolved
@@ -203,7 +221,21 @@ def time_kernel_train_step(args) -> None:
     pps = n_pts / (us / 1e6)
     tag = "_ragged" if args.ragged else ""      # distinct trajectory entries
     emit(f"perf_iter/kernel_train_step_b{B}_n{N}{tag}", us,
-         f"mode={mode};heads={Hq}/{Hkv};d={D};points_per_sec={pps:.0f}")
+         f"mode={mode};heads={Hq}/{Hkv};d={D};points_per_sec={pps:.0f};"
+         f"peak_bytes={peak_bytes}")
+
+    record = {
+        "shape": {"batch": B, "n": N, "heads": Hq, "kv_heads": Hkv,
+                  "head_dim": D, "ragged": bool(args.ragged)},
+        "mode": mode, "backend": resolved, "autotune": bool(args.autotune),
+        "us_per_step": round(us, 1), "points_per_sec": round(pps, 1),
+        "peak_bytes": peak_bytes,
+    }
+    if args.bench_json:
+        Path(args.bench_json).write_text(json.dumps(record, indent=1) + "\n")
+        print(f"# wrote {args.bench_json}", flush=True)
+    if args.baseline:
+        _check_regression(record, args.baseline, args.max_regression)
 
     if B > 1:
         # baseline: the SAME work as B sequential single-sample steps — the
@@ -232,6 +264,32 @@ def time_kernel_train_step(args) -> None:
               f"({pps:.0f} vs {pps_seq:.0f})", flush=True)
 
 
+def _check_regression(record: dict, baseline_path: str, max_regression: float):
+    """CI gate: fail when throughput regressed > max_regression vs the
+    committed baseline record (its 'after' entry, or a flat record)."""
+    p = Path(baseline_path)
+    if not p.exists():
+        print(f"# baseline {baseline_path} missing — regression gate skipped",
+              flush=True)
+        return
+    base = json.loads(p.read_text())
+    base = base.get("after", base)               # before/after trajectory file
+    base_pps = base.get("points_per_sec")
+    if not base_pps:
+        print("# baseline has no points_per_sec — regression gate skipped",
+              flush=True)
+        return
+    ratio = record["points_per_sec"] / base_pps
+    print(f"# throughput vs baseline: {ratio:.2f}x "
+          f"({record['points_per_sec']:.0f} vs {base_pps:.0f} points/sec)",
+          flush=True)
+    if ratio < 1.0 - max_regression:
+        raise SystemExit(
+            f"throughput regression: {record['points_per_sec']:.0f} points/sec "
+            f"is {(1 - ratio) * 100:.0f}% below baseline {base_pps:.0f} "
+            f"(allowed: {max_regression * 100:.0f}%)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -253,6 +311,20 @@ def main():
                          "steps for the batched-path comparison)")
     ap.add_argument("--ragged", action="store_true",
                     help="kernel-step: mixed-size batch with per-sample masks")
+    ap.add_argument("--autotune", action="store_true",
+                    help="enable the tile autotuner (kernels/tuning.py): "
+                         "measure candidate (tq, tk) grids on cache miss and "
+                         "persist to $REPRO_TUNING_CACHE "
+                         "(~/.cache/repro/tuning.json); second run hits cache")
+    ap.add_argument("--bench-json", default=None,
+                    help="kernel-step: write the measured record "
+                         "(points/sec, peak bytes) to this JSON file")
+    ap.add_argument("--baseline", default=None,
+                    help="kernel-step: committed baseline JSON to gate "
+                         "against (BENCH_perf_iter.json)")
+    ap.add_argument("--max-regression", type=float, default=0.2,
+                    help="allowed fractional throughput drop vs --baseline "
+                         "before failing (default 0.2)")
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--heads", type=int, default=4)
@@ -260,6 +332,9 @@ def main():
     ap.add_argument("--head-dim", type=int, default=32)
     args = ap.parse_args()
 
+    if args.autotune:
+        # must be set before the first attention trace resolves tiles
+        os.environ["REPRO_AUTOTUNE"] = "1"
     if args.kernel_step:
         time_kernel_train_step(args)
         return

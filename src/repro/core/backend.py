@@ -13,10 +13,23 @@ Every attention entry point (``bsa_attention``, ``nsa_causal_attention``,
 
 All four ops are differentiable (the Pallas implementations carry fused
 ``jax.custom_vjp`` backwards, the jnp ones differentiate natively), take the
-``core`` tensor convention — q ``(B, N, Hq, D)``, k/v ``(B, L, H, D)``,
-masks ``(B, L)`` bool with True = real token — and honour the shared
-logit-space masking rules (``repro.numerics``), so backends are
-interchangeable without call-site changes.
+``core`` tensor convention — q ``(B, N, Hq, D)``, k/v ``(B, L, Hkv, D)``
+with ``Hq = Hkv · rep`` (GQA-NATIVE: callers never head-repeat K/V; each
+backend owns its own GQA strategy — the Pallas kernels share one K/V fetch
+per group, the jnp reference repeats internally to pin semantics), masks
+``(B, L)`` bool with True = real token — and honour the shared logit-space
+masking rules (``repro.numerics``), so backends are interchangeable without
+call-site changes.
+
+A backend MAY additionally provide the optional fused epilogue op
+
+  * ``gated_combine(outs, gates, mask)`` — three branch outputs gated,
+    summed and query-masked in one pass (``out = Σ g_b·out_b, masked``).
+
+``bsa_attention`` / ``nsa_causal_attention`` resolve it via
+:func:`get_combine`; backends without it transparently fall back to the jnp
+reference (``branches.gated_combine_ref``), so pre-existing plug-ins keep
+working unchanged.
 
 Built-ins:
 
@@ -78,6 +91,7 @@ __all__ = [
     "resolve_backend",
     "resolve_backend_name",
     "resolve_branch_backends",
+    "get_combine",
 ]
 
 ENV_VAR = "REPRO_ATTENTION_BACKEND"
@@ -93,13 +107,19 @@ BRANCH_KEYS = ("ball", "cmp", "slc")
 class Backend(Protocol):
     """The four primitive attention ops a backend must provide.
 
-    Shapes follow ``core``: q is (B, N, Hq, D); k/v are (B, L, H, D).
-    ``ball``/``flash``/``local_window`` take EQUAL head counts (callers
-    repeat KV via ``branches.repeat_kv``); ``selection`` consumes the
-    un-repeated (B, L, Hkv, D) KV — all ``rep`` query heads of a GQA group
-    share one fetched block set.  ``chunk_tokens`` is a memory bound the
-    jnp backend honours (query-tile ``lax.map``); kernel backends ignore it.
-    Every op must be differentiable in q, k, v.
+    Shapes follow ``core``: q is (B, N, Hq, D); k/v are (B, L, Hkv, D) with
+    ``Hq = Hkv · rep`` — ALL four ops are GQA-native (callers never repeat
+    KV; query head ``h·rep + r`` belongs to KV head ``h``).  How a backend
+    exploits the grouping is its own business: the Pallas kernels share one
+    K/V fetch across the group's ``rep`` query heads, the jnp reference
+    repeats KV internally (``branches.repeat_kv``) to pin semantics.
+    ``chunk_tokens`` is a memory bound the jnp backend honours (query-tile
+    ``lax.map``); kernel backends ignore it.  Every op must be
+    differentiable in q, k, v.
+
+    Backends may also provide the OPTIONAL fused epilogue
+    ``gated_combine(outs, gates, mask)`` (not part of the required
+    protocol); see :func:`get_combine`.
     """
 
     name: str
@@ -125,18 +145,33 @@ class Backend(Protocol):
 @dataclasses.dataclass(frozen=True)
 class JnpBackend:
     """Reference implementations from ``core`` — run anywhere, differentiate
-    natively, and serve as the parity oracle for every other backend."""
+    natively, and serve as the parity oracle for every other backend.
+
+    GQA is handled by MATERIALISING the head repetition
+    (``branches.repeat_kv``) before the equal-head reference math — the
+    semantic definition the kernel backends' shared-fetch layouts must
+    match.  ``selection_attend`` is group-native already (shared block set
+    per group is the algorithm), so it takes the un-repeated KV directly.
+    """
 
     name: str = "jnp"
 
+    @staticmethod
+    def _rep(q, k, v):
+        from repro.core.branches import repeat_kv
+        rep = q.shape[2] // k.shape[2]
+        return repeat_kv(k, rep), repeat_kv(v, rep)
+
     def ball(self, q, k, v, mask, *, ball_size, chunk_tokens=0):
         from repro.core.bsa import ball_attention_ref
+        k, v = self._rep(q, k, v)
         cb = max(chunk_tokens // ball_size, 1) if chunk_tokens else 0
         return ball_attention_ref(q, k, v, mask, ball_size, chunk_balls=cb)
 
     def flash(self, q, k, v, *, key_valid=None, causal=False,
               block_causal=False, ell=1, chunk_tokens=0):
         from repro.core.branches import chunked_q_attention, sdpa
+        k, v = self._rep(q, k, v)
         if not causal:
             # chunked_q_attention owns the key-valid and block-causal bias
             # rules; chunk=0 is the dense one-shot path
@@ -157,6 +192,7 @@ class JnpBackend:
 
     def local_window(self, q, k, v, *, window, mask=None, chunk_tokens=0):
         from repro.core.nsa_causal import local_window_attention_ref
+        k, v = self._rep(q, k, v)
         cb = max(chunk_tokens // window, 1) if chunk_tokens else 0
         return local_window_attention_ref(q, k, v, window, mask=mask,
                                           chunk_blocks=cb)
@@ -166,6 +202,10 @@ class JnpBackend:
         from repro.core.branches import selection_attend
         return selection_attend(q, k, v, top_idx, sel_valid, mask,
                                 block_size=block_size, chunk_tokens=chunk_tokens)
+
+    def gated_combine(self, outs, gates, mask):
+        from repro.core.branches import gated_combine_ref
+        return gated_combine_ref(outs, gates, mask)
 
 
 # ---------------------------------------------------------------------------
@@ -212,6 +252,10 @@ class PallasBackend:
                                         block_size=block_size,
                                         group_size=group_size,
                                         interpret=self.interpret)
+
+    def gated_combine(self, outs, gates, mask):
+        from repro.kernels import ops as kops
+        return kops.gated_combine(outs, gates, mask, interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -329,6 +373,20 @@ def resolve_branch_backends(cfg) -> dict[str, Backend]:
     base = cfg.backend or DEFAULT_BACKEND
     overrides = dict(cfg.backend_overrides or ())
     return {b: get_backend(overrides.get(b, base)) for b in BRANCH_KEYS}
+
+
+def get_combine(backend: Backend):
+    """The backend's fused gate epilogue, or the jnp reference if absent.
+
+    ``gated_combine`` is an OPTIONAL backend op — plug-ins registered before
+    it existed (or that simply don't care) fall back to
+    ``branches.gated_combine_ref`` with identical semantics.
+    """
+    fn = getattr(backend, "gated_combine", None)
+    if callable(fn):
+        return fn
+    from repro.core.branches import gated_combine_ref
+    return gated_combine_ref
 
 
 register_backend("jnp", JnpBackend())

@@ -96,6 +96,21 @@ def gate_values(params: dict, cfg, x: jnp.ndarray | None, n_heads: int):
     return {b: g[:, :, i] for i, b in enumerate(BRANCHES)}
 
 
+def gated_combine_ref(outs, gates, mask):
+    """Reference gate-and-mask epilogue (paper Eq. 9 combination).
+
+    ``outs``: three (B, N, H, D) branch outputs; ``gates``: three arrays
+    broadcastable to (B, N, H, 1) fp32; ``mask``: (B, N) bool (True = real
+    query) or None.  fp32 accumulation, result in ``outs[0].dtype``.  The
+    Pallas backends fuse this into one pass (``kernels/ops.gated_combine``);
+    this jnp form is the semantic oracle.
+    """
+    out = sum(g * o.astype(jnp.float32) for g, o in zip(gates, outs))
+    if mask is not None:
+        out = jnp.where(mask[:, :, None, None], out, 0.0)
+    return out.astype(outs[0].dtype)
+
+
 # ---------------------------------------------------------------------------
 # Attention primitives (fp32 softmax; GQA via head reshape)
 # ---------------------------------------------------------------------------
@@ -107,6 +122,26 @@ def repeat_kv(kv: jnp.ndarray, rep: int) -> jnp.ndarray:
     B, N, Hkv, D = kv.shape
     return jnp.broadcast_to(kv[:, :, :, None, :], (B, N, Hkv, rep, D)).reshape(
         B, N, Hkv * rep, D)
+
+
+def diag_scores(q, k_cmp, rep: int, score_dtype=jnp.float32):
+    """Selection importance scores q·k_cmpᵀ, GQA-group-summed.
+
+    q: (B, M, Hq, D), k_cmp: (B, NB, Hkv, D) -> (B, M, Hkv, NB) fp32,
+    summing the ``rep`` q-heads of each GQA group (NSA's shared-importance
+    trick).  Operands are cast ONCE to ``score_dtype`` (``BSAConfig.
+    score_dtype``) — fp32 by default; bf16 keeps the einsum on bf16 MXU
+    paths instead of silently upcasting activations mid-einsum.  The
+    contraction always ACCUMULATES in fp32 and the result is fp32 either
+    way, so top-k ordering is computed at full precision.
+    """
+    B, M, Hq, D = q.shape
+    Hkv = k_cmp.shape[2]
+    assert Hq == Hkv * rep, f"GQA miswiring: Hq={Hq} != Hkv={Hkv} * rep={rep}"
+    dt = jnp.dtype(score_dtype)
+    qg = q.reshape(B, M, Hkv, rep, D).astype(dt)
+    return jnp.einsum("bmkrd,bnkd->bmkn", qg, k_cmp.astype(dt),
+                      preferred_element_type=jnp.float32)
 
 
 def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -21,16 +21,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.backend import resolve_branch_backends
+from repro.core.backend import get_combine, resolve_branch_backends
 from repro.core.branches import (
     NEG_INF,
     block_validity,
+    diag_scores,
     gate_values,
     gates_init,
     mask_to_bias,
     phi_apply,
     phi_init,
-    repeat_kv,
     sdpa,
 )
 from repro.core.config import BSAConfig
@@ -93,9 +93,9 @@ def ball_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 
 def _ball_branch(q, k, v, mask, cfg: BSAConfig, backend):
-    rep = q.shape[2] // k.shape[2]
-    kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
-    return backend.ball(q, kf, vf, mask, ball_size=cfg.ball_size,
+    # GQA-native: K/V go in un-repeated — the backend owns the group
+    # strategy (kernels share one fetch per group, jnp repeats internally)
+    return backend.ball(q, k, v, mask, ball_size=cfg.ball_size,
                         chunk_tokens=cfg.jnp_chunk_tokens)
 
 
@@ -106,22 +106,24 @@ def _ball_branch(q, k, v, mask, cfg: BSAConfig, backend):
 def _compression_branch(params, q, k, v, mask, cfg: BSAConfig, backend):
     """Returns (out, k_cmp, v_cmp, blk_valid). out: (B, N, Hq, D)."""
     B, N, Hq, D = q.shape
-    Hkv = k.shape[2]
-    rep = Hq // Hkv
     k_cmp = phi_apply(params["phi_k"], k, mask, cfg)              # (B,NB,Hkv,D)
     v_cmp = phi_apply(params["phi_v"], v, mask, cfg)
     blk_valid = block_validity(mask, B, N, cfg.cmp_block)          # (B,NB)
-    kf, vf = repeat_kv(k_cmp, rep), repeat_kv(v_cmp, rep)          # (B,NB,Hq,D)
+    # GQA-native: the coarse K/V stay at Hkv heads — no repeat_kv blowup
 
     if cfg.group_compression:
-        # Eq. 15: pool queries too; attend at block level; repeat ℓ×.
+        # Eq. 15: pool queries too; attend at block level; un-pool ℓ× via a
+        # broadcast VIEW (jnp.repeat would materialise the ℓ-fold copy)
+        nb = N // cfg.cmp_block
         q_cmp = phi_apply(params["phi_q"], q, mask, cfg)           # (B,NB,Hq,D)
-        out_c = backend.flash(q_cmp, kf, vf, key_valid=blk_valid,
+        out_c = backend.flash(q_cmp, k_cmp, v_cmp, key_valid=blk_valid,
                               chunk_tokens=cfg.jnp_chunk_tokens)   # (B,NB,Hq,D)
-        out = jnp.repeat(out_c, cfg.cmp_block, axis=1)             # (B,N,Hq,D)
+        out = jnp.broadcast_to(out_c[:, :, None],
+                               (B, nb, cfg.cmp_block, Hq, D)
+                               ).reshape(B, N, Hq, D)
         return out, k_cmp, v_cmp, blk_valid
 
-    out = backend.flash(q, kf, vf, key_valid=blk_valid,
+    out = backend.flash(q, k_cmp, v_cmp, key_valid=blk_valid,
                         chunk_tokens=cfg.jnp_chunk_tokens)
     return out, k_cmp, v_cmp, blk_valid
 
@@ -147,13 +149,13 @@ def _selection_scores(params, q, k_cmp, blk_valid, mask, cfg: BSAConfig):
         # Eq. 13–14: score with φ-pooled queries (block granularity);
         # q-heads within each GQA group are summed (NSA: shared fetch per group)
         q_s = phi_apply(params["phi_q"], q, mask, cfg)             # (B,NB,Hq,D)
-        s = _diag_scores(q_s, k_cmp, rep)                           # (B,NB,Hkv,NB)
+        s = diag_scores(q_s, k_cmp, rep, cfg.score_dtype)           # (B,NB,Hkv,NB)
         rows_per_group = max(g // ell, 1)
         G = nb // rows_per_group
         s = s.reshape(B, G, rows_per_group, Hkv, nb).mean(axis=2)   # Eq. 12 mean
     else:
         # token-level scores; optional group averaging (Eq. 10–12)
-        s = _diag_scores(q, k_cmp, rep)                             # (B,N,Hkv,NB)
+        s = diag_scores(q, k_cmp, rep, cfg.score_dtype)             # (B,N,Hkv,NB)
         if cfg.group_size:
             G = N // g
             s = s.reshape(B, G, g, k_cmp.shape[2], nb).mean(axis=2)
@@ -170,17 +172,6 @@ def _selection_scores(params, q, k_cmp, blk_valid, mask, cfg: BSAConfig):
         own = grp_ball[:, None] == blk_ball[None, :]                # (G,NB)
         s = jnp.where(own[None, :, None, :], NEG_INF, s)
     return s
-
-
-def _diag_scores(q, k_cmp, rep):
-    """q: (B,M,Hq,D), k_cmp: (B,NB,Hkv,D) -> (B,M,Hkv,NB), summing the
-    ``rep`` q-heads of each GQA group (NSA's shared-importance trick)."""
-    B, M, Hq, D = q.shape
-    Hkv = k_cmp.shape[2]
-    qg = q.reshape(B, M, Hkv, Hq // Hkv, D)
-    return jnp.einsum("bmkrd,bnkd->bmkn", qg.astype(jnp.float32),
-                      k_cmp.astype(jnp.float32),
-                      preferred_element_type=jnp.float32)
 
 
 def _selection_branch(params, q, k, v, k_cmp, blk_valid, mask, cfg: BSAConfig,
@@ -234,12 +225,11 @@ def bsa_attention(params: dict, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         params, q, k, v, k_cmp, blk_valid, mask, cfg, bk["slc"])
 
     gates = gate_values(params["gates"], cfg, x, Hq)
-    out = (gates["ball"] * out_ball.astype(jnp.float32)
-           + gates["cmp"] * out_cmp.astype(jnp.float32)
-           + gates["slc"] * out_slc.astype(jnp.float32))
-    if mask is not None:
-        out = jnp.where(mask[:, :, None, None], out, 0.0)
-    out = out.astype(q.dtype)
+    # fused epilogue: gate + sum + query-mask in one pass (the pallas
+    # backends run kernels/epilogue.py; others fall back to the jnp ref)
+    out = get_combine(bk["ball"])(
+        (out_ball, out_cmp, out_slc),
+        (gates["ball"], gates["cmp"], gates["slc"]), mask)
     if return_aux:
         return out, {"ball": out_ball, "cmp": out_cmp, "slc": out_slc,
                      "indices": top_idx, "gates": gates}

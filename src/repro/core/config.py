@@ -36,6 +36,11 @@ class BSAConfig:
                                     # (dict accepted; stored as sorted items)
     jnp_chunk_tokens: int = 0       # jnp backend: query-tile size bounding
                                     # temp memory (0 = off); kernels ignore it
+    score_dtype: str = "float32"    # selection-scoring einsum operand dtype
+                                    # ("float32" | "bfloat16"): bf16 keeps
+                                    # scoring on bf16 MXU paths instead of
+                                    # silently upcasting activations; the
+                                    # contraction always accumulates in fp32
     # DEPRECATED: pre-registry boolean.  Constructing with use_kernels=True/
     # False still works (maps to backend="pallas"/"jnp" + DeprecationWarning);
     # the stored field is normalised back to None so dataclasses.replace()
@@ -69,6 +74,10 @@ class BSAConfig:
                 DeprecationWarning, stacklevel=3)
             object.__setattr__(self, "backend", mapped)
             object.__setattr__(self, "use_kernels", None)
+        if self.score_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"score_dtype {self.score_dtype!r} must be "
+                             '"float32" or "bfloat16" (the tested, '
+                             "TPU-native scoring dtypes)")
         if self.ball_size & (self.ball_size - 1):
             raise ValueError("ball_size must be a power of two")
         if self.slc_block != self.cmp_block:

@@ -20,7 +20,6 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.backend import resolve_backend
-from repro.core.branches import repeat_kv
 
 __all__ = ["erwin_attention"]
 
@@ -29,29 +28,31 @@ def erwin_attention(q, k, v, *, ball_size: int, level: int = 0,
                     mask=None, backend=None):
     """BTA at coarsening ``level`` (0 = leaf balls, paper's BTA).
 
-    q: (B,N,Hq,D); k,v: (B,N,Hkv,D).  For level>0, q/k/v are mean-pooled by
-    s=2^level along the sequence, attended within balls of ``ball_size``
-    (so the receptive field covers s·ball_size leaf tokens), and the output
-    is repeated s× (Erwin's coarsen/refine with skip handled by caller).
+    q: (B,N,Hq,D); k,v: (B,N,Hkv,D) — GQA-native: K/V are passed un-repeated
+    (the backend owns the group strategy).  For level>0, q/k/v are
+    mean-pooled by s=2^level along the sequence, attended within balls of
+    ``ball_size`` (so the receptive field covers s·ball_size leaf tokens),
+    and the output is un-pooled s× via a broadcast view (Erwin's
+    coarsen/refine with skip handled by caller).
     ``backend`` names an attention backend (or passes a Backend object);
     None resolves via the usual precedence chain (default "auto")."""
     B, N, Hq, D = q.shape
-    rep = Hq // k.shape[2]
-    kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
     bk = resolve_backend(backend)
     s = 1 << level
     if s > 1:
         assert N % (s * ball_size) == 0, "sequence must cover coarse balls"
         def pool(t):
-            return t.reshape(B, N // s, s, Hq, D).mean(axis=2).astype(t.dtype)
-        qp, kp, vp = pool(q), pool(kf), pool(vf)
+            H = t.shape[2]
+            return t.reshape(B, N // s, s, H, D).mean(axis=2).astype(t.dtype)
+        qp, kp, vp = pool(q), pool(k), pool(v)
         mp = None
         if mask is not None:
             mp = mask.reshape(B, N // s, s).any(-1)
         outp = bk.ball(qp, kp, vp, mp, ball_size=ball_size)
-        out = jnp.repeat(outp, s, axis=1)
+        out = jnp.broadcast_to(outp[:, :, None],
+                               (B, N // s, s, Hq, D)).reshape(B, N, Hq, D)
     else:
-        out = bk.ball(q, kf, vf, mask, ball_size=ball_size)
+        out = bk.ball(q, k, v, mask, ball_size=ball_size)
     if mask is not None:
         out = jnp.where(mask[:, :, None, None], out, jnp.zeros((), out.dtype))
     return out

@@ -5,7 +5,6 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.backend import resolve_backend
-from repro.core.branches import repeat_kv
 
 __all__ = ["full_attention"]
 
@@ -15,10 +14,10 @@ def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                    backend=None) -> jnp.ndarray:
     """q: (B,N,Hq,D); k,v: (B,L,Hkv,D); mask: (B,L) key validity.
 
+    GQA-native: K/V are passed to the backend un-repeated (kernels share one
+    K/V fetch per GQA group; the jnp reference repeats internally).
     ``backend`` names an attention backend (or passes a Backend object);
     None resolves via the usual precedence chain (default "auto").
     """
-    rep = q.shape[2] // k.shape[2]
-    kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
     bk = resolve_backend(backend)
-    return bk.flash(q, kf, vf, key_valid=mask, causal=causal)
+    return bk.flash(q, k, v, key_valid=mask, causal=causal)

@@ -29,10 +29,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.backend import resolve_branch_backends
+from repro.core.backend import get_combine, resolve_branch_backends
 from repro.core.branches import (
     NEG_INF,
     block_validity,
+    diag_scores,
     gate_values,
     gates_init,
     mask_to_bias,
@@ -117,9 +118,8 @@ def local_window_attention_ref(q, k, v, window: int, mask=None,
 
 
 def _local_branch(q, k, v, mask, cfg: BSAConfig, backend):
-    rep = q.shape[2] // k.shape[2]
-    kf, vf = repeat_kv(k, rep), repeat_kv(v, rep)
-    return backend.local_window(q, kf, vf, window=cfg.effective_local_window,
+    # GQA-native: un-repeated K/V — the backend owns the group strategy
+    return backend.local_window(q, k, v, window=cfg.effective_local_window,
                                 mask=mask, chunk_tokens=cfg.jnp_chunk_tokens)
 
 
@@ -140,14 +140,13 @@ def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
     bk = resolve_branch_backends(cfg)
     out_local = _local_branch(q, k, v, mask, cfg, bk["ball"])
 
-    # --- compression ---
+    # --- compression (GQA-native: coarse K/V stay at Hkv heads) ---
     k_cmp = phi_apply(params["phi_k"], k, mask, cfg)                # (B,NB,Hkv,D)
     v_cmp = phi_apply(params["phi_v"], v, mask, cfg)
     blk_valid = block_validity(mask, B, N, ell)
-    kf, vf = repeat_kv(k_cmp, rep), repeat_kv(v_cmp, rep)
     # block-causal rule (query t sees coarse key j iff block j ends before t)
     # is generated by the backend — in-kernel on pallas, bias on jnp
-    out_cmp = bk["cmp"].flash(q, kf, vf, key_valid=blk_valid,
+    out_cmp = bk["cmp"].flash(q, k_cmp, v_cmp, key_valid=blk_valid,
                               block_causal=True, ell=ell,
                               chunk_tokens=cfg.jnp_chunk_tokens)
 
@@ -156,12 +155,10 @@ def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
                                          mask, cfg, bk["slc"])
 
     gates = gate_values(params["gates"], cfg, x, Hq)
-    out = (gates["ball"] * out_local.astype(jnp.float32)
-           + gates["cmp"] * out_cmp.astype(jnp.float32)
-           + gates["slc"] * out_slc.astype(jnp.float32))
-    if mask is not None:
-        out = jnp.where(mask[:, :, None, None], out, 0.0)
-    out = out.astype(q.dtype)
+    # fused epilogue: gate + sum + query-mask in one pass (see core/bsa.py)
+    out = get_combine(bk["ball"])(
+        (out_local, out_cmp, out_slc),
+        (gates["ball"], gates["cmp"], gates["slc"]), mask)
     if return_aux:
         return out, {"local": out_local, "cmp": out_cmp, "slc": out_slc,
                      "indices": top_idx, "gates": gates}
@@ -177,21 +174,15 @@ def _causal_selection(params, q, k, v, k_cmp, blk_valid, mask, cfg: BSAConfig,
     nb = N // ell
     g = cfg.group_size if cfg.group_size else 1
 
-    # scores
+    # scores (shared diag_scores: one cast to cfg.score_dtype, fp32 accumulate)
     if cfg.query_cmp_selection and cfg.group_size:
         q_s = phi_apply(params["phi_q"], q, mask, cfg)              # (B,NB,Hq,D)
-        s = jnp.einsum("bmkrd,bnkd->bmkn",
-                       q_s.reshape(B, nb, Hkv, rep, D).astype(jnp.float32),
-                       k_cmp.astype(jnp.float32),
-                       preferred_element_type=jnp.float32)
+        s = diag_scores(q_s, k_cmp, rep, cfg.score_dtype)           # (B,NB,Hkv,NB)
         rows_per_group = max(g // ell, 1)
         G = nb // rows_per_group
         s = s.reshape(B, G, rows_per_group, Hkv, nb).mean(axis=2)
     else:
-        qg = q.reshape(B, N, Hkv, rep, D)
-        s = jnp.einsum("bmkrd,bnkd->bmkn", qg.astype(jnp.float32),
-                       k_cmp.astype(jnp.float32),
-                       preferred_element_type=jnp.float32)
+        s = diag_scores(q, k_cmp, rep, cfg.score_dtype)             # (B,N,Hkv,NB)
         if cfg.group_size:
             G = N // g
             s = s.reshape(B, G, g, Hkv, nb).mean(axis=2)

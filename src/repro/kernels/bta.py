@@ -1,19 +1,28 @@
 """Ball-Tree Attention Pallas kernel (block-diagonal fused attention).
 
 The ball IS the tile: with ball size m ≤ 512 and head_dim ≤ 128, one ball's
-Q/K/V (m×D) fits in VMEM whole, so the kernel is a single-pass fused
-softmax-attention per (batch·head, ball) grid cell — no streaming, no
-running-max bookkeeping.  MXU-aligned: the two matmuls are (m,D)×(D,m) and
-(m,m)×(m,D) with m a multiple of 8 (sublane) and D ∈ {64, 128} (lane).
+K/V (m×D) fits in VMEM whole, so the kernel is a single-pass fused
+softmax-attention per (batch·KV-head, ball) grid cell — no streaming, no
+running-max bookkeeping.
 
-VMEM budget per grid step (m=256, D=128, bf16 in / fp32 logits):
-  q,k,v: 3·256·128·2 B = 192 KiB;  logits+p: 2·256·256·4 B = 512 KiB;
-  out: 128 KiB  →  < 1 MiB of the ~16 MiB VMEM.
+GQA-NATIVE: the grid iterates KV heads, not query heads.  Queries arrive as
+(B·Hkv, rep, N, D) — the ``rep = Hq/Hkv`` query heads of one GQA group ride
+the same grid cell as their shared K/V tile, collapsed into the matmul row
+dimension: the two matmuls are (rep·m, D)×(D, m) and (rep·m, m)×(m, D).
+One K/V fetch HBM→VMEM serves the whole group (NSA's shared-KV-fetch
+speedup), and the extra query rows FEED the MXU rather than re-fetching.
+MXU-aligned: rep·m is a multiple of 8 (sublane) and D ∈ {64, 128} (lane).
 
-Differentiable: forward additionally emits the per-row logsumexp (BH, N);
-the backward is a single-pass per-ball kernel (the ball-is-the-tile layout
-means dQ, dK, dV of a ball depend only on that ball) that recomputes
-p = exp(s − lse) and produces all three gradients in one grid sweep.
+VMEM budget per grid step (m=256, rep=4, D=128, bf16 in / fp32 logits):
+  q: 256 KiB; k,v: 2·64 KiB; logits+p: 2·1024·256·4 B = 2 MiB;
+  out: 256 KiB  →  < 3 MiB of the ~16 MiB VMEM.
+
+Differentiable: forward additionally emits the per-row logsumexp
+(B·Hkv, rep, N); the backward is a single-pass per-ball kernel (the
+ball-is-the-tile layout means dQ, dK, dV of a ball depend only on that ball)
+that recomputes p = exp(s − lse) and produces all three gradients in one
+grid sweep — dK/dV accumulate over the group's rep query heads inside the
+(rep·m)-row matmul itself, so no cross-cell reduction is needed.
 """
 
 from __future__ import annotations
@@ -31,12 +40,13 @@ __all__ = ["ball_attention_kernel_call"]
 
 
 def _fwd_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, lse_ref, *, scale: float):
-    q = q_ref[0].astype(jnp.float32)                      # (m, D)
-    k = k_ref[0].astype(jnp.float32)
+    rep, m, D = q_ref.shape[1:]
+    q = q_ref[0].astype(jnp.float32).reshape(rep * m, D)  # group rows fused
+    k = k_ref[0].astype(jnp.float32)                      # (m, D) one fetch/group
     v = v_ref[0]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    s = s + bias_ref[0]                                   # (m, m) + (1, m) key bias
+    s = s + bias_ref[0]                                   # (rep·m, m) + (1, m)
     mx = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), NEG_INF / 2)
     p = jnp.exp(s - mx)
     p = jnp.where(s <= NEG_INF / 2, 0.0, p)
@@ -44,66 +54,71 @@ def _fwd_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, lse_ref, *, scale: float):
     denom = jnp.maximum(l, 1e-20)
     o = jax.lax.dot_general((p / denom).astype(v.dtype), v, (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    o_ref[0] = o.astype(o_ref.dtype)
-    lse_ref[0] = lse_finalize(mx, l)[:, 0]
+    o_ref[0] = o.reshape(rep, m, D).astype(o_ref.dtype)
+    lse_ref[0] = lse_finalize(mx, l)[:, 0].reshape(rep, m)
 
 
 def _bwd_kernel(q_ref, k_ref, v_ref, bias_ref, do_ref, lse_ref, delta_ref,
                 dq_ref, dk_ref, dv_ref, *, scale: float):
-    q = q_ref[0].astype(jnp.float32)                      # (m, D)
+    rep, m, D = q_ref.shape[1:]
+    q = q_ref[0].astype(jnp.float32).reshape(rep * m, D)
     k = k_ref[0].astype(jnp.float32)
     v = v_ref[0].astype(jnp.float32)
-    do = do_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32).reshape(rep * m, D)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     s = s + bias_ref[0]
-    p = p_from_lse(s, lse_ref[0][:, None])                # (m, m)
+    p = p_from_lse(s, lse_ref[0].reshape(rep * m, 1))     # (rep·m, m)
+    # dK/dV: one matmul sums over the rep·m group rows — the GQA group's
+    # gradient accumulation is the contraction itself
     dv = jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    ds = p * (dp - delta_ref[0][:, None]) * scale         # (m, m)
+    ds = p * (dp - delta_ref[0].reshape(rep * m, 1)) * scale
     dq = jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
     dk = jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    dq_ref[0] = dq.astype(dq_ref.dtype)
+    dq_ref[0] = dq.reshape(rep, m, D).astype(dq_ref.dtype)
     dk_ref[0] = dk.astype(dk_ref.dtype)
     dv_ref[0] = dv.astype(dv_ref.dtype)
 
 
 def _fwd_call(q, k, v, key_bias, *, ball_size, n_heads, interpret):
-    BH, N, D = q.shape
+    BH, rep, N, D = q.shape
     m = ball_size
     assert N % m == 0
-    H = n_heads
-    blk = pl.BlockSpec((1, m, D), lambda b, i: (b, i, 0))
+    H = n_heads                                           # KV heads
+    qblk = pl.BlockSpec((1, rep, m, D), lambda b, i: (b, 0, i, 0))
+    kvblk = pl.BlockSpec((1, m, D), lambda b, i: (b, i, 0))
     bias_blk = pl.BlockSpec((1, m), lambda b, i: (b // H, i))
-    lse_blk = pl.BlockSpec((1, m), lambda b, i: (b, i))
+    lse_blk = pl.BlockSpec((1, rep, m), lambda b, i: (b, 0, i))
     return pl.pallas_call(
         functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5)),
         grid=(BH, N // m),
-        in_specs=[blk, blk, blk, bias_blk],
-        out_specs=(blk, lse_blk),
-        out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
-                   jax.ShapeDtypeStruct((BH, N), jnp.float32)),
+        in_specs=[qblk, kvblk, kvblk, bias_blk],
+        out_specs=(qblk, lse_blk),
+        out_shape=(jax.ShapeDtypeStruct((BH, rep, N, D), q.dtype),
+                   jax.ShapeDtypeStruct((BH, rep, N), jnp.float32)),
         interpret=interpret,
     )(q, k, v, key_bias)
 
 
 def _bwd_call(q, k, v, key_bias, do, lse, delta, *, ball_size, n_heads, interpret):
-    BH, N, D = q.shape
+    BH, rep, N, D = q.shape
     m = ball_size
     H = n_heads
-    blk = pl.BlockSpec((1, m, D), lambda b, i: (b, i, 0))
+    qblk = pl.BlockSpec((1, rep, m, D), lambda b, i: (b, 0, i, 0))
+    kvblk = pl.BlockSpec((1, m, D), lambda b, i: (b, i, 0))
     bias_blk = pl.BlockSpec((1, m), lambda b, i: (b // H, i))
-    row_blk = pl.BlockSpec((1, m), lambda b, i: (b, i))
+    row_blk = pl.BlockSpec((1, rep, m), lambda b, i: (b, 0, i))
     return pl.pallas_call(
         functools.partial(_bwd_kernel, scale=1.0 / (D ** 0.5)),
         grid=(BH, N // m),
-        in_specs=[blk, blk, blk, bias_blk, blk, row_blk, row_blk],
-        out_specs=(blk, blk, blk),
-        out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+        in_specs=[qblk, kvblk, kvblk, bias_blk, qblk, row_blk, row_blk],
+        out_specs=(qblk, kvblk, kvblk),
+        out_shape=(jax.ShapeDtypeStruct((BH, rep, N, D), q.dtype),
                    jax.ShapeDtypeStruct((BH, N, D), k.dtype),
                    jax.ShapeDtypeStruct((BH, N, D), v.dtype)),
         interpret=interpret,
@@ -136,12 +151,14 @@ def _make_vjp(ball_size: int, n_heads: int, interpret: bool):
 def ball_attention_kernel_call(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                                key_bias: jnp.ndarray, *, ball_size: int,
                                n_heads: int, interpret: bool | None = None):
-    """q,k,v: (BH, N, D) flattened over batch×heads; key_bias: (B, N) fp32
-    additive (0 / NEG_INF).  Returns (BH, N, D).  Differentiable in q, k, v."""
+    """q: (B·Hkv, rep, N, D) grouped queries; k, v: (B·Hkv, N, D) — ONE K/V
+    stream per KV head, shared by its ``rep`` query heads; key_bias: (B, N)
+    fp32 additive (0 / NEG_INF); ``n_heads`` is the KV head count Hkv.
+    Returns (B·Hkv, rep, N, D).  Differentiable in q, k, v."""
     if interpret is None:
         interpret = should_interpret()
     if interpret and q.shape[0] > 1:
-        # CPU fallback: per-slice grids keep the interpreter linear in B·H
+        # CPU fallback: per-slice grids keep the interpreter linear in B·Hkv
         bias_bh = jnp.repeat(key_bias, n_heads, axis=0)
         return interpret_batch_map(_make_vjp(ball_size, 1, True),
                                    q, k, v, bias_bh)

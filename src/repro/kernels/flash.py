@@ -6,20 +6,32 @@ scratch).  Used for:
   * the COMPRESSION branch — queries vs φ-pooled coarse KV.  ``block_causal``
     (with ``ell`` = compression block length) masks coarse block j for query
     t unless the block ends strictly before t: (j+1)·ell − 1 < t.  The mask
-    is generated in-kernel from indices, never materialised (an N × N/ℓ fp32
-    bias for 32k tokens would be 0.5 GB — this is why the bias is virtual).
+    is generated in-kernel from indices and never materialised (an N × N/ℓ
+    fp32 bias for 32k tokens would be 0.5 GB — this is why the bias is
+    virtual).
   * FULL attention baseline — ``causal`` token mask.
   * both support an additive per-key bias row (B, L) fp32 for padding.
 
-Grid: (BH, nQ, nK) with K innermost.  Scratch: m, l: (Tq, 1) fp32,
-acc: (Tq, D) fp32.  VMEM @ Tq=Tk=256, D=128 ≈ 0.6 MiB.
+GQA-NATIVE: the grid iterates KV heads.  Queries arrive as
+(B·Hkv, rep, N, D); each grid cell loads ONE (Tk, D) K/V tile and streams it
+against the (rep·Tq, D) fused query rows of its GQA group — K/V HBM traffic
+is divided by ``rep`` versus the head-repeated layout, and the rep× taller
+matmul keeps the MXU fed.  Tile sizes (tq, tk) come from the caller
+(``kernels/ops.py`` resolves them via the ``kernels/tuning.py`` autotuner
+and PADS both axes to tile multiples, so arbitrary N/L are legal here as
+long as tq | N and tk | L).
+
+Grid: (B·Hkv, nQ, nK) with K innermost.  Scratch: m, l: (rep·Tq, 1) fp32,
+acc: (rep·Tq, D) fp32.  VMEM @ rep=4, Tq=Tk=256, D=128 ≈ 1.7 MiB.
 
 Differentiable (FlashAttention-style recomputation backward): the forward
-additionally emits per-row logsumexp (BH, N); the backward recomputes
-p = exp(s − lse) per tile in two kernels — a dQ kernel on the forward grid
-(K innermost, dQ accumulated in scratch) and a dK/dV kernel on the
-transposed grid (BH, nK, nQ) with Q innermost, so each gradient is a pure
-per-tile accumulation with no cross-grid races.
+additionally emits per-row logsumexp (B·Hkv, rep, N); the backward
+recomputes p = exp(s − lse) per tile in two kernels — a dQ kernel on the
+forward grid (K innermost, dQ accumulated in scratch) and a dK/dV kernel on
+the transposed grid (B·Hkv, nK, nQ) with Q innermost; dK/dV of a tile
+accumulate over the group's rep query heads inside the (rep·Tq)-row
+contraction itself, so each gradient stays a pure per-tile accumulation
+with no cross-grid races.
 """
 
 from __future__ import annotations
@@ -37,20 +49,16 @@ from repro.kernels.common import (NEG_INF, interpret_batch_map, lse_finalize,
 __all__ = ["flash_attention_kernel_call"]
 
 
-def _pick_tile(n: int, pref: int) -> int:
-    """Largest divisor of n that is ≤ pref (tile sizes must divide the axis)."""
-    t = min(pref, n)
-    while n % t:
-        t -= 1
-    return t
+def _mask_logits(s, i, j, *, rows, tq, tk, causal, block_causal, ell):
+    """Apply the virtual (index-generated) causal / block-causal mask.
 
-
-def _mask_logits(s, i, j, *, tq, tk, causal, block_causal, ell):
-    """Apply the virtual (index-generated) causal / block-causal mask."""
+    ``rows = rep·tq``: row r of the fused group tile is query position
+    ``i·tq + r % tq`` (rep-major layout), so all rep heads of a group see
+    the same mask row."""
     if not (causal or block_causal):
         return s
-    qpos = i * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
-    kidx = j * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    qpos = i * tq + jax.lax.broadcasted_iota(jnp.int32, (rows, tk), 0) % tq
+    kidx = j * tk + jax.lax.broadcasted_iota(jnp.int32, (rows, tk), 1)
     if block_causal:
         ok = (kidx + 1) * ell - 1 < qpos                   # coarse block ends before t
     else:
@@ -64,6 +72,8 @@ def _fwd_kernel(q_ref, k_ref, v_ref, kbias_ref, o_ref, lse_ref,
                 causal: bool, block_causal: bool, ell: int):
     i = pl.program_id(1)
     j = pl.program_id(2)
+    rep, _, D = q_ref.shape[1:]
+    rows = rep * tq
 
     @pl.when(j == 0)
     def _init():
@@ -71,16 +81,16 @@ def _fwd_kernel(q_ref, k_ref, v_ref, kbias_ref, o_ref, lse_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0].astype(jnp.float32)                       # (Tq, D)
+    q = q_ref[0].astype(jnp.float32).reshape(rows, D)      # (rep·Tq, D)
     k = k_ref[0].astype(jnp.float32)                       # (Tk, D)
     v = v_ref[0]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     s = s + kbias_ref[0]                                   # (Tk,) key-validity bias
-    s = _mask_logits(s, i, j, tq=tq, tk=tk, causal=causal,
+    s = _mask_logits(s, i, j, rows=rows, tq=tq, tk=tk, causal=causal,
                      block_causal=block_causal, ell=ell)
 
-    m_prev = m_scr[...]                                    # (Tq, 1)
+    m_prev = m_scr[...]                                    # (rep·Tq, 1)
     m_cur = jnp.max(s, axis=-1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
     m_safe = jnp.maximum(m_new, NEG_INF / 2)
@@ -99,9 +109,9 @@ def _fwd_kernel(q_ref, k_ref, v_ref, kbias_ref, o_ref, lse_ref,
     @pl.when(j == n_k - 1)
     def _finalize():
         denom = jnp.maximum(l_scr[...], 1e-20)
-        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        o_ref[0] = (acc_scr[...] / denom).reshape(rep, tq, D).astype(o_ref.dtype)
         m_safe_f = jnp.maximum(m_scr[...], NEG_INF / 2)
-        lse_ref[0] = lse_finalize(m_safe_f, l_scr[...])[:, 0]
+        lse_ref[0] = lse_finalize(m_safe_f, l_scr[...])[:, 0].reshape(rep, tq)
 
 
 def _dq_kernel(q_ref, k_ref, v_ref, kbias_ref, do_ref, lse_ref, delta_ref,
@@ -110,30 +120,32 @@ def _dq_kernel(q_ref, k_ref, v_ref, kbias_ref, do_ref, lse_ref, delta_ref,
                causal: bool, block_causal: bool, ell: int):
     i = pl.program_id(1)
     j = pl.program_id(2)
+    rep, _, D = q_ref.shape[1:]
+    rows = rep * tq
 
     @pl.when(j == 0)
     def _init():
         dq_scr[...] = jnp.zeros_like(dq_scr)
 
-    q = q_ref[0].astype(jnp.float32)                       # (Tq, D)
+    q = q_ref[0].astype(jnp.float32).reshape(rows, D)      # (rep·Tq, D)
     k = k_ref[0].astype(jnp.float32)                       # (Tk, D)
     v = v_ref[0].astype(jnp.float32)
-    do = do_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32).reshape(rows, D)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     s = s + kbias_ref[0]
-    s = _mask_logits(s, i, j, tq=tq, tk=tk, causal=causal,
+    s = _mask_logits(s, i, j, rows=rows, tq=tq, tk=tk, causal=causal,
                      block_causal=block_causal, ell=ell)
-    p = p_from_lse(s, lse_ref[0][:, None])                 # (Tq, Tk)
+    p = p_from_lse(s, lse_ref[0].reshape(rows, 1))         # (rep·Tq, Tk)
     dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    ds = p * (dp - delta_ref[0][:, None]) * scale
+    ds = p * (dp - delta_ref[0].reshape(rows, 1)) * scale
     dq_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
                                        preferred_element_type=jnp.float32)
 
     @pl.when(j == n_k - 1)
     def _finalize():
-        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+        dq_ref[0] = dq_scr[...].reshape(rep, tq, D).astype(dq_ref.dtype)
 
 
 def _dkv_kernel(q_ref, k_ref, v_ref, kbias_ref, do_ref, lse_ref, delta_ref,
@@ -142,27 +154,31 @@ def _dkv_kernel(q_ref, k_ref, v_ref, kbias_ref, do_ref, lse_ref, delta_ref,
                 causal: bool, block_causal: bool, ell: int):
     j = pl.program_id(1)                                   # K tile (outer)
     i = pl.program_id(2)                                   # Q tile (inner)
+    rep, _, D = q_ref.shape[1:]
+    rows = rep * tq
 
     @pl.when(i == 0)
     def _init():
         dk_scr[...] = jnp.zeros_like(dk_scr)
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
-    q = q_ref[0].astype(jnp.float32)                       # (Tq, D)
+    q = q_ref[0].astype(jnp.float32).reshape(rows, D)      # (rep·Tq, D)
     k = k_ref[0].astype(jnp.float32)                       # (Tk, D)
     v = v_ref[0].astype(jnp.float32)
-    do = do_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32).reshape(rows, D)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     s = s + kbias_ref[0]
-    s = _mask_logits(s, i, j, tq=tq, tk=tk, causal=causal,
+    s = _mask_logits(s, i, j, rows=rows, tq=tq, tk=tk, causal=causal,
                      block_causal=block_causal, ell=ell)
-    p = p_from_lse(s, lse_ref[0][:, None])                 # (Tq, Tk)
+    p = p_from_lse(s, lse_ref[0].reshape(rows, 1))         # (rep·Tq, Tk)
+    # the (0,)-axis contraction sums over rep·Tq rows: the GQA group's dK/dV
+    # accumulation happens inside the matmul
     dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
                                        preferred_element_type=jnp.float32)
     dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    ds = p * (dp - delta_ref[0][:, None]) * scale
+    ds = p * (dp - delta_ref[0].reshape(rows, 1)) * scale
     dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
                                        preferred_element_type=jnp.float32)
 
@@ -174,7 +190,7 @@ def _dkv_kernel(q_ref, k_ref, v_ref, kbias_ref, do_ref, lse_ref, delta_ref,
 
 def _fwd_call(q, k, v, key_bias, *, n_heads, tq, tk, causal, block_causal,
               ell, interpret):
-    BH, N, D = q.shape
+    BH, rep, N, D = q.shape
     L = k.shape[1]
     H = n_heads
     n_k = L // tk
@@ -185,19 +201,19 @@ def _fwd_call(q, k, v, key_bias, *, n_heads, tq, tk, causal, block_causal,
         kern,
         grid=(BH, N // tq, n_k),
         in_specs=[
-            pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, rep, tq, D), lambda b, i, j: (b, 0, i, 0)),
             pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, tk), lambda b, i, j: (b // H, j)),
         ],
-        out_specs=(pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
-                   pl.BlockSpec((1, tq), lambda b, i, j: (b, i))),
-        out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
-                   jax.ShapeDtypeStruct((BH, N), jnp.float32)),
+        out_specs=(pl.BlockSpec((1, rep, tq, D), lambda b, i, j: (b, 0, i, 0)),
+                   pl.BlockSpec((1, rep, tq), lambda b, i, j: (b, 0, i))),
+        out_shape=(jax.ShapeDtypeStruct((BH, rep, N, D), q.dtype),
+                   jax.ShapeDtypeStruct((BH, rep, N), jnp.float32)),
         scratch_shapes=[
-            pltpu.VMEM((tq, 1), jnp.float32),
-            pltpu.VMEM((tq, 1), jnp.float32),
-            pltpu.VMEM((tq, D), jnp.float32),
+            pltpu.VMEM((rep * tq, 1), jnp.float32),
+            pltpu.VMEM((rep * tq, 1), jnp.float32),
+            pltpu.VMEM((rep * tq, D), jnp.float32),
         ],
         interpret=interpret,
     )(q, k, v, key_bias)
@@ -205,7 +221,7 @@ def _fwd_call(q, k, v, key_bias, *, n_heads, tq, tk, causal, block_causal,
 
 def _bwd_calls(q, k, v, key_bias, do, lse, delta, *, n_heads, tq, tk,
                causal, block_causal, ell, interpret):
-    BH, N, D = q.shape
+    BH, rep, N, D = q.shape
     L = k.shape[1]
     H = n_heads
     n_q, n_k = N // tq, L // tk
@@ -216,17 +232,17 @@ def _bwd_calls(q, k, v, key_bias, do, lse, delta, *, n_heads, tq, tk,
         functools.partial(_dq_kernel, n_k=n_k, **mask_kw),
         grid=(BH, n_q, n_k),
         in_specs=[
-            pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, rep, tq, D), lambda b, i, j: (b, 0, i, 0)),
             pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, tk, D), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, tk), lambda b, i, j: (b // H, j)),
-            pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, tq), lambda b, i, j: (b, i)),
-            pl.BlockSpec((1, tq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, rep, tq, D), lambda b, i, j: (b, 0, i, 0)),
+            pl.BlockSpec((1, rep, tq), lambda b, i, j: (b, 0, i)),
+            pl.BlockSpec((1, rep, tq), lambda b, i, j: (b, 0, i)),
         ],
-        out_specs=pl.BlockSpec((1, tq, D), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, N, D), q.dtype),
-        scratch_shapes=[pltpu.VMEM((tq, D), jnp.float32)],
+        out_specs=pl.BlockSpec((1, rep, tq, D), lambda b, i, j: (b, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, rep, N, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((rep * tq, D), jnp.float32)],
         interpret=interpret,
     )(q, k, v, key_bias, do, lse, delta)
 
@@ -234,13 +250,13 @@ def _bwd_calls(q, k, v, key_bias, do, lse, delta, *, n_heads, tq, tk,
         functools.partial(_dkv_kernel, n_q=n_q, **mask_kw),
         grid=(BH, n_k, n_q),
         in_specs=[
-            pl.BlockSpec((1, tq, D), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, rep, tq, D), lambda b, j, i: (b, 0, i, 0)),
             pl.BlockSpec((1, tk, D), lambda b, j, i: (b, j, 0)),
             pl.BlockSpec((1, tk, D), lambda b, j, i: (b, j, 0)),
             pl.BlockSpec((1, tk), lambda b, j, i: (b // H, j)),
-            pl.BlockSpec((1, tq, D), lambda b, j, i: (b, i, 0)),
-            pl.BlockSpec((1, tq), lambda b, j, i: (b, i)),
-            pl.BlockSpec((1, tq), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, rep, tq, D), lambda b, j, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, rep, tq), lambda b, j, i: (b, 0, i)),
+            pl.BlockSpec((1, rep, tq), lambda b, j, i: (b, 0, i)),
         ],
         out_specs=(pl.BlockSpec((1, tk, D), lambda b, j, i: (b, j, 0)),
                    pl.BlockSpec((1, tk, D), lambda b, j, i: (b, j, 0))),
@@ -283,16 +299,25 @@ def flash_attention_kernel_call(q, k, v, key_bias, *, n_heads: int,
                                 tq: int = 256, tk: int = 256,
                                 causal: bool = False, block_causal: bool = False,
                                 ell: int = 1, interpret: bool | None = None):
-    """q: (BH, N, D); k,v: (BH, L, D); key_bias: (B, L) fp32 additive.
-    Differentiable in q, k, v."""
-    BH, N, D = q.shape
+    """q: (B·Hkv, rep, N, D) grouped queries; k, v: (B·Hkv, L, D) — one K/V
+    stream per KV head shared by its rep query heads; key_bias: (B, L) fp32
+    additive; ``n_heads`` is the KV head count Hkv.  ``tq`` must divide N and
+    ``tk`` divide L (``kernels/ops.py`` pads both axes to guarantee this).
+    Returns (B·Hkv, rep, N, D).  Differentiable in q, k, v."""
+    BH, rep, N, D = q.shape
     L = k.shape[1]
-    tq = _pick_tile(N, tq)
-    tk = _pick_tile(L, tk)
+    tq = min(tq, N)
+    tk = min(tk, L)
+    if N % tq or L % tk:
+        # a real error, not an assert: under python -O a silently truncated
+        # grid would leave the tail query rows of the output unwritten
+        raise ValueError(f"tiles must divide the (padded) axes: N={N} tq={tq},"
+                         f" L={L} tk={tk} — kernels/ops.flash_attention pads;"
+                         " direct callers must pass dividing tiles")
     if interpret is None:
         interpret = should_interpret()
     if interpret and BH > 1:
-        # CPU fallback: per-slice grids keep the interpreter linear in B·H
+        # CPU fallback: per-slice grids keep the interpreter linear in B·Hkv
         bias_bh = jnp.repeat(key_bias, n_heads, axis=0)
         return interpret_batch_map(
             _make_vjp(1, tq, tk, causal, block_causal, ell, True),

@@ -2,8 +2,12 @@
 
 Query block i attends causally within block i and fully to block i−1 —
 the TPU-aligned blocked equivalent of a sliding window.  The previous block
-is fetched by passing K (and V) twice with two index maps (self / prev),
-so one grid step holds a (w, D) query tile and a (2w, D) key tile in VMEM.
+is fetched by passing K (and V) twice with two index maps (self / prev).
+
+GQA-NATIVE: the grid iterates KV heads.  Queries arrive as
+(B·Hkv, rep, N, D); one grid step holds the group's fused (rep·w, D) query
+tile and a single (2w, D) key tile in VMEM — the K/V fetch is shared by all
+``rep`` query heads of the GQA group instead of being duplicated per head.
 
 Key-validity masking for ragged batches rides the same fetch pattern: the
 per-token additive bias row (B, N) fp32 (0 valid / NEG_INF padding) is
@@ -11,14 +15,15 @@ passed twice with the self / prev index maps and added in LOGIT space before
 the softmax — identical semantics to the bta/flash kernels, so a packed
 batch of mixed-size sequences is one grid launch.
 
-Differentiable: forward also emits per-row logsumexp.  The backward is a
-single-pass per-block kernel — dQ of block i needs K/V of blocks {i−1, i}
-(already the forward fetch pattern), while dK/dV of block i get
-contributions from query blocks {i, i+1}; the NEXT query block (with its
+Differentiable: forward also emits per-row logsumexp (B·Hkv, rep, N).  The
+backward is a single-pass per-block kernel — dQ of block i needs K/V of
+blocks {i−1, i} (already the forward fetch pattern), while dK/dV of block i
+get contributions from query blocks {i, i+1}; the NEXT query block (with its
 dO/lse/delta rows) is fetched via a second set of index maps, so each grid
 cell owns its output blocks outright and no cross-cell accumulation is
-needed.  The key bias enters the recomputed logits of both contributions,
-so masked keys get exactly zero gradient.
+needed.  dK/dV sum over the group's rep query heads inside the
+(rep·w)-row contractions.  The key bias enters the recomputed logits of both
+contributions, so masked keys get exactly zero gradient.
 """
 
 from __future__ import annotations
@@ -35,21 +40,31 @@ from repro.kernels.common import (NEG_INF, interpret_batch_map, lse_finalize,
 __all__ = ["local_window_kernel_call"]
 
 
+def _window_mask(s, i, *, rows, w):
+    """Causal-within-self + full-prev mask for the fused (rep·w, 2w) tile.
+
+    Row r is query position r % w of the block (rep-major layout), so every
+    GQA head of the group shares one mask row."""
+    qi = jax.lax.broadcasted_iota(jnp.int32, (rows, 2 * w), 0) % w
+    ki = jax.lax.broadcasted_iota(jnp.int32, (rows, 2 * w), 1)
+    ok = ki <= qi + w                                      # prev full + self causal
+    ok = ok & ((i > 0) | (ki >= w))                        # block 0 has no prev
+    return jnp.where(ok, s, NEG_INF)
+
+
 def _fwd_kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, bs_ref, bp_ref,
                 o_ref, lse_ref, *, scale: float, w: int):
     i = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32)                       # (w, D)
+    rep, _, D = q_ref.shape[1:]
+    rows = rep * w
+    q = q_ref[0].astype(jnp.float32).reshape(rows, D)      # (rep·w, D)
     k = jnp.concatenate([kp_ref[0], ks_ref[0]], axis=0).astype(jnp.float32)  # (2w, D)
     v = jnp.concatenate([vp_ref[0], vs_ref[0]], axis=0)
     bias = jnp.concatenate([bp_ref[0], bs_ref[0]], axis=0)  # (2w,) key validity
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     s = s + bias
-    qi = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 0)
-    ki = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 1)
-    ok = ki <= qi + w                                      # prev full + self causal
-    ok = ok & ((i > 0) | (ki >= w))                        # block 0 has no prev
-    s = jnp.where(ok, s, NEG_INF)
+    s = _window_mask(s, i, rows=rows, w=w)
     mx = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), NEG_INF / 2)
     p = jnp.exp(s - mx)
     p = jnp.where(s <= NEG_INF / 2, 0.0, p)
@@ -57,18 +72,20 @@ def _fwd_kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, bs_ref, bp_ref,
     denom = jnp.maximum(l, 1e-20)
     o = jax.lax.dot_general((p / denom).astype(v.dtype), v, (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    o_ref[0] = o.astype(o_ref.dtype)
-    lse_ref[0] = lse_finalize(mx, l)[:, 0]
+    o_ref[0] = o.reshape(rep, w, D).astype(o_ref.dtype)
+    lse_ref[0] = lse_finalize(mx, l)[:, 0].reshape(rep, w)
 
 
 def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref, bs_ref, bp_ref,
                 dos_ref, don_ref, lses_ref, lsen_ref, dels_ref, deln_ref,
                 dq_ref, dk_ref, dv_ref, *, scale: float, w: int, n_b: int):
     i = pl.program_id(1)
-    qs = qs_ref[0].astype(jnp.float32)                     # (w, D)
+    rep, _, D = qs_ref.shape[1:]
+    rows = rep * w
+    qs = qs_ref[0].astype(jnp.float32).reshape(rows, D)    # (rep·w, D)
     ks = ks_ref[0].astype(jnp.float32)
     vs = vs_ref[0].astype(jnp.float32)
-    dos = dos_ref[0].astype(jnp.float32)
+    dos = dos_ref[0].astype(jnp.float32).reshape(rows, D)
     kcat = jnp.concatenate([kp_ref[0], ks_ref[0]], axis=0).astype(jnp.float32)
     vcat = jnp.concatenate([vp_ref[0], vs_ref[0]], axis=0).astype(jnp.float32)
     bcat = jnp.concatenate([bp_ref[0], bs_ref[0]], axis=0)  # (2w,)
@@ -77,19 +94,17 @@ def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref, bs_ref, bp_ref,
     s = jax.lax.dot_general(qs, kcat, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     s = s + bcat
-    qi = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 0)
-    ki = jax.lax.broadcasted_iota(jnp.int32, (w, 2 * w), 1)
-    ok = (ki <= qi + w) & ((i > 0) | (ki >= w))
-    s = jnp.where(ok, s, NEG_INF)
-    p = p_from_lse(s, lses_ref[0][:, None])                # (w, 2w)
+    s = _window_mask(s, i, rows=rows, w=w)
+    p = p_from_lse(s, lses_ref[0].reshape(rows, 1))        # (rep·w, 2w)
     dp = jax.lax.dot_general(dos, vcat, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    ds = p * (dp - dels_ref[0][:, None]) * scale
-    dq_ref[0] = jax.lax.dot_general(ds, kcat, (((1,), (0,)), ((), ())),
-                                    preferred_element_type=jnp.float32
-                                    ).astype(dq_ref.dtype)
+    ds = p * (dp - dels_ref[0].reshape(rows, 1)) * scale
+    dq = jax.lax.dot_general(ds, kcat, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dq_ref[0] = dq.reshape(rep, w, D).astype(dq_ref.dtype)
 
-    # --- dK/dV of block i, self part (query block i, columns w:) ---
+    # --- dK/dV of block i, self part (query block i, columns w:) — the
+    #     (0,)-axis contraction sums the group's rep·w rows ---
     p_self = p[:, w:]
     ds_self = ds[:, w:]
     dv = jax.lax.dot_general(p_self, dos, (((0,), (0,)), ((), ())),
@@ -99,20 +114,20 @@ def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref, bs_ref, bp_ref,
 
     # --- dK/dV of block i, next part (query block i+1 sees block i as its
     #     fully-visible prev; zeroed for the last block where no next exists) ---
-    qn = qn_ref[0].astype(jnp.float32)
-    don = don_ref[0].astype(jnp.float32)
+    qn = qn_ref[0].astype(jnp.float32).reshape(rows, D)
+    don = don_ref[0].astype(jnp.float32).reshape(rows, D)
     sn = jax.lax.dot_general(qn, ks, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32) * scale
     sn = sn + bs_ref[0]
     # kill the clamped self-fetch at the last block in LOGIT space: its
     # anti-causal logits can exceed lse, and exp-then-zero would give inf·0
     sn = jnp.where(i < n_b - 1, sn, NEG_INF)
-    pn = p_from_lse(sn, lsen_ref[0][:, None])              # (w, w)
+    pn = p_from_lse(sn, lsen_ref[0].reshape(rows, 1))      # (rep·w, w)
     dv = dv + jax.lax.dot_general(pn, don, (((0,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
     dpn = jax.lax.dot_general(don, vs, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32)
-    dsn = pn * (dpn - deln_ref[0][:, None]) * scale
+    dsn = pn * (dpn - deln_ref[0].reshape(rows, 1)) * scale
     dk = dk + jax.lax.dot_general(dsn, qn, (((0,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
     dk_ref[0] = dk.astype(dk_ref.dtype)
@@ -120,51 +135,55 @@ def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref, bs_ref, bp_ref,
 
 
 def _fwd_call(q, k, v, key_bias, *, window, n_heads, interpret):
-    BH, N, D = q.shape
+    BH, rep, N, D = q.shape
     w = window
-    H = n_heads
+    H = n_heads                                            # KV heads
     assert N % w == 0
+    q_blk = pl.BlockSpec((1, rep, w, D), lambda b, i: (b, 0, i, 0))
     self_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, i, 0))
     prev_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
     bias_self = pl.BlockSpec((1, w), lambda b, i: (b // H, i))
     bias_prev = pl.BlockSpec((1, w), lambda b, i: (b // H, jnp.maximum(i - 1, 0)))
-    lse_blk = pl.BlockSpec((1, w), lambda b, i: (b, i))
+    lse_blk = pl.BlockSpec((1, rep, w), lambda b, i: (b, 0, i))
     return pl.pallas_call(
         functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5), w=w),
         grid=(BH, N // w),
-        in_specs=[self_blk, self_blk, self_blk, prev_blk, prev_blk,
+        in_specs=[q_blk, self_blk, self_blk, prev_blk, prev_blk,
                   bias_self, bias_prev],
-        out_specs=(self_blk, lse_blk),
-        out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
-                   jax.ShapeDtypeStruct((BH, N), jnp.float32)),
+        out_specs=(q_blk, lse_blk),
+        out_shape=(jax.ShapeDtypeStruct((BH, rep, N, D), q.dtype),
+                   jax.ShapeDtypeStruct((BH, rep, N), jnp.float32)),
         interpret=interpret,
     )(q, k, v, k, v, key_bias, key_bias)
 
 
 def _bwd_call(q, k, v, key_bias, do, lse, delta, *, window, n_heads, interpret):
-    BH, N, D = q.shape
+    BH, rep, N, D = q.shape
     w = window
     H = n_heads
     n_b = N // w
+    q_self = pl.BlockSpec((1, rep, w, D), lambda b, i: (b, 0, i, 0))
+    q_next = pl.BlockSpec((1, rep, w, D),
+                          lambda b, i: (b, 0, jnp.minimum(i + 1, n_b - 1), 0))
     self_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, i, 0))
     prev_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
-    next_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.minimum(i + 1, n_b - 1), 0))
     bias_self = pl.BlockSpec((1, w), lambda b, i: (b // H, i))
     bias_prev = pl.BlockSpec((1, w), lambda b, i: (b // H, jnp.maximum(i - 1, 0)))
-    row_self = pl.BlockSpec((1, w), lambda b, i: (b, i))
-    row_next = pl.BlockSpec((1, w), lambda b, i: (b, jnp.minimum(i + 1, n_b - 1)))
+    row_self = pl.BlockSpec((1, rep, w), lambda b, i: (b, 0, i))
+    row_next = pl.BlockSpec((1, rep, w),
+                            lambda b, i: (b, 0, jnp.minimum(i + 1, n_b - 1)))
     return pl.pallas_call(
         functools.partial(_bwd_kernel, scale=1.0 / (D ** 0.5), w=w, n_b=n_b),
         grid=(BH, n_b),
-        in_specs=[self_blk, next_blk,              # q self / next
-                  self_blk, prev_blk,              # k self / prev
-                  self_blk, prev_blk,              # v self / prev
-                  bias_self, bias_prev,            # key bias self / prev
-                  self_blk, next_blk,              # do self / next
-                  row_self, row_next,              # lse self / next
-                  row_self, row_next],             # delta self / next
-        out_specs=(self_blk, self_blk, self_blk),
-        out_shape=(jax.ShapeDtypeStruct((BH, N, D), q.dtype),
+        in_specs=[q_self, q_next,                # q self / next
+                  self_blk, prev_blk,            # k self / prev
+                  self_blk, prev_blk,            # v self / prev
+                  bias_self, bias_prev,          # key bias self / prev
+                  q_self, q_next,                # do self / next
+                  row_self, row_next,            # lse self / next
+                  row_self, row_next],           # delta self / next
+        out_specs=(q_self, self_blk, self_blk),
+        out_shape=(jax.ShapeDtypeStruct((BH, rep, N, D), q.dtype),
                    jax.ShapeDtypeStruct((BH, N, D), k.dtype),
                    jax.ShapeDtypeStruct((BH, N, D), v.dtype)),
         interpret=interpret,
@@ -196,13 +215,15 @@ def _make_vjp(window: int, n_heads: int, interpret: bool):
 @functools.partial(jax.jit, static_argnames=("window", "n_heads", "interpret"))
 def local_window_kernel_call(q, k, v, key_bias, *, window: int, n_heads: int,
                              interpret: bool | None = None):
-    """q,k,v: (BH, N, D) flattened over batch×heads; key_bias: (B, N) fp32
-    additive (0 valid / NEG_INF padding).  Returns (BH, N, D).
+    """q: (B·Hkv, rep, N, D) grouped queries; k, v: (B·Hkv, N, D) — one K/V
+    stream per KV head shared by its rep query heads; key_bias: (B, N) fp32
+    additive (0 valid / NEG_INF padding); ``n_heads`` is the KV head count.
+    Returns (B·Hkv, rep, N, D).
     Differentiable in q, k, v (the bias is a mask — its cotangent is dropped)."""
     if interpret is None:
         interpret = should_interpret()
     if interpret and q.shape[0] > 1:
-        # CPU fallback: per-slice grids keep the interpreter linear in B·H
+        # CPU fallback: per-slice grids keep the interpreter linear in B·Hkv
         bias_bh = jnp.repeat(key_bias, n_heads, axis=0)
         return interpret_batch_map(_make_vjp(window, 1, True),
                                    q, k, v, bias_bh)

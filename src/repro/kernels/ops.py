@@ -1,15 +1,19 @@
 """jit'd wrappers: layout transforms between core tensor convention
-(B, N, H, D) and the kernels' flattened (B·H, N, D) / blocked layouts.
+(B, N, H, D) and the kernels' GQA-grouped (B·Hkv, rep, N, D) / blocked
+layouts.
 
 These are the entry points the "pallas" / "interpret" attention backends
 (``repro.core.backend.PallasBackend``) dispatch to.
 
-Shape/dtype contract (shared by all four wrappers):
+Shape/dtype contract (shared by all four attention wrappers):
 
-  * q is (B, N, Hq, D); k, v are (B, L, Hkv, D).  The wrappers take EQUAL
-    head counts (``selection_attention`` excepted): GQA repetition
-    (Hq = Hkv·rep) is materialised by the caller via
-    ``repro.core.branches.repeat_kv`` before entering the kernel layout.
+  * q is (B, N, Hq, D); k, v are (B, L, Hkv, D) with Hq = Hkv·rep.  The
+    kernels are GQA-NATIVE: K/V are NEVER head-repeated — each kernel's grid
+    iterates KV heads and a group's ``rep`` query heads share one fetched
+    K/V tile, folded into the matmul row dimension (forward and fused
+    backward; dK/dV accumulate across the group inside the contraction).
+    Query head h·rep + r belongs to KV head h (the ``branches.repeat_kv``
+    convention, kept so the jnp reference pins semantics).
   * ``mask`` / ``key_valid`` is a (B, L) bool array, True = real token.
     It masks KEYS only — padded queries still compute rows (they are cheap
     and keep shapes static); the model zeroes their outputs.  Internally the
@@ -20,69 +24,94 @@ Shape/dtype contract (shared by all four wrappers):
   * Any floating dtype is accepted (fp32 and bf16 are tested); softmax
     statistics are always fp32 inside the kernels.
 
+Tiles and padding: ``flash_attention`` resolves its (tq, tk) tiles through
+``kernels/tuning.py`` (cache → autotune → deterministic heuristic) and PADS
+the query/key axes up to tile multiples — padded keys carry NEG_INF bias
+(zero weight, zero gradient), padded query rows are sliced off — so ragged
+lengths with no friendly divisor no longer collapse the tile size to 1.
+
 Batched (ragged) geometries: every wrapper carries a leading batch dim, so a
 packed batch of variable-size samples — one mask row per sample, produced by
 ``repro.core.balltree.pack_ragged`` — is a single kernel launch.
 
-All wrappers are differentiable in q/k/v: the kernel calls carry
-``jax.custom_vjp`` fused backward passes (see each kernel module), and the
-layout transforms here are plain jnp ops, so ``jax.grad`` through
+All wrappers are differentiable in their floating inputs: the kernel calls
+carry ``jax.custom_vjp`` fused backward passes (see each kernel module), and
+the layout transforms here are plain jnp ops, so ``jax.grad`` through
 ``bsa_attention`` / ``nsa_causal_attention`` works on the kernel backends.
 Mask-derived biases are non-differentiable by construction (their cotangent
 is dropped in the kernel VJPs).  Every wrapper takes ``interpret`` (None =
 auto-detect, True = force Pallas interpret mode — the "interpret" backend).
+
+``gated_combine`` is the fifth op: the fused branch-combination epilogue
+(see ``kernels/epilogue.py``), differentiable in branch outputs and gates.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.bta import ball_attention_kernel_call
+from repro.kernels.epilogue import gated_combine_kernel_call
 from repro.kernels.flash import flash_attention_kernel_call
 from repro.kernels.local import local_window_kernel_call
 from repro.kernels.selection import selection_attention_kernel_call
 from repro.numerics import NEG_INF, key_padding_bias
 
 __all__ = ["ball_attention", "flash_attention", "local_window_attention",
-           "selection_attention"]
+           "selection_attention", "gated_combine"]
 
 
 def _to_bh(t):
-    """(B, N, H, D) → (B·H, N, D)"""
-    B, N, H, D = t.shape
-    return t.transpose(0, 2, 1, 3).reshape(B * H, N, D)
+    """(B, L, Hkv, D) → (B·Hkv, L, D) — the single-K/V-stream-per-head layout."""
+    B, L, H, D = t.shape
+    return t.transpose(0, 2, 1, 3).reshape(B * H, L, D)
 
 
-def _from_bh(t, B, H):
-    BH, N, D = t.shape
-    return t.reshape(B, H, N, D).transpose(0, 2, 1, 3)
+def _to_grouped(q, Hkv):
+    """(B, N, Hq, D) → (B·Hkv, rep, N, D): query head h·rep + r rides KV
+    head h's grid cells as fused matmul rows (GQA-native kernel layout)."""
+    B, N, Hq, D = q.shape
+    rep = Hq // Hkv
+    return (q.reshape(B, N, Hkv, rep, D)
+             .transpose(0, 2, 3, 1, 4)
+             .reshape(B * Hkv, rep, N, D))
+
+
+def _from_grouped(o, B, Hkv):
+    BH, rep, N, D = o.shape
+    return (o.reshape(B, Hkv, rep, N, D)
+             .transpose(0, 3, 1, 2, 4)
+             .reshape(B, N, Hkv * rep, D))
 
 
 def ball_attention(q, k, v, mask, ball_size: int, *,
                    interpret: bool | None = None):
     """Ball-Tree Attention: full attention inside each contiguous ball.
 
-    q, k, v: (B, N, H, D) EQUAL head counts (repeat KV first for GQA);
-    ``mask``: (B, N) bool (True = real) or None — masks keys in logit space,
-    one row per sample of a packed ragged batch.  ``ball_size`` must divide
-    N.  ``interpret`` forces Pallas interpret mode (None = auto-detect).
-    Returns (B, N, H, D).  Differentiable in q, k, v.
+    q: (B, N, Hq, D); k, v: (B, N, Hkv, D) with Hq = Hkv·rep — GQA-native,
+    no KV repetition; ``mask``: (B, N) bool (True = real) or None — masks
+    keys in logit space, one row per sample of a packed ragged batch.
+    ``ball_size`` must divide N.  ``interpret`` forces Pallas interpret mode
+    (None = auto-detect).  Returns (B, N, Hq, D).  Differentiable in q, k, v.
     """
-    B, N, H, D = q.shape
+    B, N, Hq, D = q.shape
+    Hkv = k.shape[2]
     out = ball_attention_kernel_call(
-        _to_bh(q), _to_bh(k), _to_bh(v), key_padding_bias(mask, B, N),
-        ball_size=ball_size, n_heads=H, interpret=interpret)
-    return _from_bh(out, B, H)
+        _to_grouped(q, Hkv), _to_bh(k), _to_bh(v), key_padding_bias(mask, B, N),
+        ball_size=ball_size, n_heads=Hkv, interpret=interpret)
+    return _from_grouped(out, B, Hkv)
 
 
 def flash_attention(q, k, v, *, key_valid=None, causal=False,
                     block_causal=False, ell=1, bias=None,
-                    tq: int = 256, tk: int = 256,
+                    tq: int | None = None, tk: int | None = None,
                     interpret: bool | None = None):
     """Streaming-softmax attention of q vs an arbitrary-length K/V.
 
-    q: (B, N, H, D); k, v: (B, L, H, D) equal head counts (L may differ from
-    N — the compression branch attends N queries to L = N/ℓ coarse tokens).
+    q: (B, N, Hq, D); k, v: (B, L, Hkv, D) with Hq = Hkv·rep (GQA-native; L
+    may differ from N — the compression branch attends N queries to L = N/ℓ
+    coarse tokens).
 
     ``key_valid``: (B, L) bool, True = real key (per-sample row of a packed
     ragged batch).  ``causal``: token-level lower-triangular mask (needs
@@ -90,35 +119,78 @@ def flash_attention(q, k, v, *, key_valid=None, causal=False,
     ``ell`` — query t sees coarse key j iff (j+1)·ell − 1 < t; the mask is
     generated in-kernel from indices and never materialised.  ``bias``:
     (B, 1, 1, L) fp32 additive key bias accepted as an alternative to
-    ``key_valid`` (the two add if both given).  ``tq``/``tk`` are tile-size
-    preferences (clamped to divisors of N/L).  Returns (B, N, H, D).
-    Differentiable in q, k, v."""
-    B, N, H, D = q.shape
+    ``key_valid`` (the two add if both given).  ``tq``/``tk`` override the
+    tile sizes; left as None they resolve through the ``kernels/tuning.py``
+    autotuner (cache → measure → heuristic).  Axes that are not tile
+    multiples are PADDED (masked keys / sliced query rows), never shrunk to
+    degenerate tiles.  Returns (B, N, Hq, D).  Differentiable in q, k, v."""
+    B, N, Hq, D = q.shape
+    Hkv = k.shape[2]
     L = k.shape[1]
+    if interpret is None:
+        from repro.kernels.common import should_interpret
+        interpret = should_interpret()
+    if tq is None or tk is None:
+        atq, atk = tuning.get_tiles(
+            "flash", n_q=N, n_k=L, d=D, dtype=q.dtype, interpret=interpret,
+            variant=tuning.flash_variant(causal, block_causal, ell),
+            measure=_flash_measure(N, L, D, q.dtype, causal, block_causal,
+                                   ell, interpret))
+        tq = tq or atq
+        tk = tk or atk
+    tq, tk = min(tq, tuning.round_up(N, 8)), min(tk, tuning.round_up(L, 8))
+
     kb = key_padding_bias(key_valid, B, L)
     if bias is not None:
         kb = kb + bias.reshape(B, L).astype(jnp.float32)
+
+    # pad axes to tile multiples: padded keys get NEG_INF bias (zero weight,
+    # zero grad), padded query rows compute garbage and are sliced off
+    Np, Lp = tuning.round_up(N, tq), tuning.round_up(L, tk)
+    if Lp != L:
+        k = jnp.pad(k, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+        kb = jnp.pad(kb, ((0, 0), (0, Lp - L)), constant_values=NEG_INF)
+    if Np != N:
+        q = jnp.pad(q, ((0, 0), (0, Np - N), (0, 0), (0, 0)))
+
     out = flash_attention_kernel_call(
-        _to_bh(q), _to_bh(k), _to_bh(v), kb, n_heads=H,
+        _to_grouped(q, Hkv), _to_bh(k), _to_bh(v), kb, n_heads=Hkv,
         causal=causal, block_causal=block_causal, ell=ell, tq=tq, tk=tk,
         interpret=interpret)
-    return _from_bh(out, B, H)
+    out = _from_grouped(out, B, Hkv)
+    return out[:, :N] if Np != N else out
+
+
+def _flash_measure(N, L, D, dtype, causal, block_causal, ell, interpret):
+    """Measure callback for the tuner — only invoked on a cache miss with
+    autotuning enabled (``tuning.get_tiles`` owns that policy)."""
+    if not tuning.autotune_enabled():
+        return None
+
+    def measure(tq, tk):
+        from repro.kernels.tuning import tune_measure_flash
+        return tune_measure_flash(tq, tk, n_q=N, n_k=L, d=D, dtype=dtype,
+                                  causal=causal, block_causal=block_causal,
+                                  ell=ell, interpret=interpret)
+    return measure
 
 
 def local_window_attention(q, k, v, window: int, mask=None, *,
                            interpret: bool | None = None):
     """Blocked local causal attention (the LM 'ball' branch).
 
-    q, k, v: (B, N, H, D) equal head counts; query block i (size ``window``)
-    attends causally within itself and fully to block i−1.  ``mask``:
-    (B, N) bool (True = real) or None — key-validity for packed ragged
-    batches, applied in logit space inside the kernel.  Returns
-    (B, N, H, D).  Differentiable in q, k, v."""
-    B, N, H, D = q.shape
+    q: (B, N, Hq, D); k, v: (B, N, Hkv, D) with Hq = Hkv·rep (GQA-native);
+    query block i (size ``window``) attends causally within itself and fully
+    to block i−1.  ``mask``: (B, N) bool (True = real) or None — key-validity
+    for packed ragged batches, applied in logit space inside the kernel.
+    Returns (B, N, Hq, D).  Differentiable in q, k, v."""
+    B, N, Hq, D = q.shape
+    Hkv = k.shape[2]
     out = local_window_kernel_call(
-        _to_bh(q), _to_bh(k), _to_bh(v), key_padding_bias(mask, B, N),
-        window=window, n_heads=H, interpret=interpret)
-    return _from_bh(out, B, H)
+        _to_grouped(q, Hkv), _to_bh(k), _to_bh(v), key_padding_bias(mask, B, N),
+        window=window, n_heads=Hkv, interpret=interpret)
+    return _from_grouped(out, B, Hkv)
 
 
 def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
@@ -126,9 +198,9 @@ def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
                         interpret: bool | None = None):
     """Group-selected sparse attention via the scalar-prefetch kernel.
 
-    q: (B, N, Hq, D); k, v: (B, N, Hkv, D) with Hq = Hkv·rep (GQA — the only
-    wrapper that takes the un-repeated KV: all rep query heads of a group
-    share one fetched block set, which is the point of group selection).
+    q: (B, N, Hq, D); k, v: (B, N, Hkv, D) with Hq = Hkv·rep (GQA-native
+    from day one: all rep query heads of a group share one fetched block
+    set, which is the point of group selection).
     ``top_idx``/``sel_valid``: (B, G, Hkv, k*) — per query group and KV head,
     the selected coarse-block ids and their validity (invalid selections are
     encoded as index −1 for the kernel and skipped).  ``mask``: (B, N) bool
@@ -162,3 +234,40 @@ def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
     return (out.reshape(B, Hkv, G, g, rep, D)
                .transpose(0, 2, 3, 1, 4, 5)
                .reshape(B, N, Hq, D))
+
+
+def gated_combine(outs, gates, mask, *, interpret: bool | None = None):
+    """Fused gate-and-mask epilogue over the three branch outputs.
+
+    ``outs``: three (B, N, H, D) arrays (same shape/dtype); ``gates``: three
+    fp32 arrays broadcastable to (B, N, H, 1) — scalar-mode (1, 1, H, 1) or
+    token-mode (B, N, H, 1) sigmoid gate values; ``mask``: (B, N) bool
+    (True = real query) or None.  Computes
+    ``(Σ_b g_b · out_b) · mask`` in one Pallas pass instead of three fp32
+    HBM temporaries.  Returns (B, N, H, D) in ``outs[0].dtype``.
+    Differentiable in outs and gates (gate cotangents flow back through the
+    jnp broadcast, so scalar gates receive their summed gradient)."""
+    o1, o2, o3 = outs
+    B, N, H, D = o1.shape
+    R = B * N * H
+    g1, g2, g3 = (jnp.broadcast_to(g.astype(jnp.float32), (B, N, H, 1))
+                  .reshape(R, 1) for g in gates)
+    if mask is None:
+        m = jnp.ones((R, 1), jnp.float32)
+    else:
+        m = (jnp.broadcast_to(mask[:, :, None], (B, N, H))
+             .reshape(R, 1).astype(jnp.float32))
+    rows = [o.reshape(R, D) for o in (o1, o2, o3)]
+
+    tile = tuning.heuristic_tile(R, 1024)
+    Rp = tuning.round_up(R, tile)
+    if Rp != R:
+        pad = ((0, Rp - R), (0, 0))
+        rows = [jnp.pad(o, pad) for o in rows]
+        g1, g2, g3 = (jnp.pad(g, pad) for g in (g1, g2, g3))
+        m = jnp.pad(m, pad)
+    out = gated_combine_kernel_call(rows[0], rows[1], rows[2], g1, g2, g3, m,
+                                    tile=tile, interpret=interpret)
+    if Rp != R:
+        out = out[:R]
+    return out.reshape(B, N, H, D)

@@ -5,6 +5,11 @@ Covers the named-backend API end-to-end:
   * forward + gradient parity of every built-in backend against the "jnp"
     reference, for all four attention entry points (bsa / nsa-causal /
     erwin / full);
+  * the GQA-native kernel contract: a parity sweep over rep ∈ {1, 2, 4}
+    (Hq = Hkv·rep, K/V passed UN-repeated) for bsa/nsa/erwin on every
+    registered backend, fwd + grads, with ragged (per-sample) masks;
+  * the optional ``gated_combine`` epilogue op: backends that provide it are
+    routed through it, plug-ins without it fall back to the jnp reference;
   * resolution precedence: config < ``use_backend(...)`` context < the
     ``REPRO_ATTENTION_BACKEND`` environment variable;
   * per-branch overrides (``backend_overrides={"slc": ...}``);
@@ -145,6 +150,74 @@ def test_full_attention_parity(name, causal):
 
 
 # ---------------------------------------------------------------------------
+# GQA-native kernel contract: rep ∈ {1, 2, 4}, K/V passed UN-repeated, with
+# RAGGED masks (two different sample lengths in one packed batch).  The jnp
+# backend repeats internally — it pins the semantics every kernel layout
+# must reproduce, fwd and grads.
+# ---------------------------------------------------------------------------
+
+_GQA_REF_CACHE: dict = {}
+
+
+def _gqa_case(rep):
+    B, N, Hkv, D = 2, 64, 1, 16
+    Hq = Hkv * rep
+    key = jax.random.fold_in(KEY, 100 + rep)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, N, Hq, D))
+    k = jax.random.normal(ks[1], (B, N, Hkv, D))
+    v = jax.random.normal(ks[2], (B, N, Hkv, D))
+    # ragged: sample 0 full, sample 1 keeps a 40-token prefix
+    mask = jnp.stack([jnp.ones(N, bool), jnp.arange(N) < 40])
+    cfg = BSAConfig(**CFG_KW, backend="jnp")
+    params = {
+        "bsa": bsa_init(jax.random.fold_in(key, 1), cfg, n_heads=Hq,
+                        n_kv_heads=Hkv, head_dim=D, d_model=Hq * D),
+        "nsa": nsa_init(jax.random.fold_in(key, 2), cfg, n_heads=Hq,
+                        n_kv_heads=Hkv, head_dim=D, d_model=Hq * D),
+    }
+    return q, k, v, mask, cfg, params
+
+
+def _gqa_entry_fns(entry, cfg, params, mask):
+    if entry == "bsa":
+        return lambda q, k, v: bsa_attention(params["bsa"], q, k, v, cfg=cfg,
+                                             mask=mask)
+    if entry == "nsa":
+        return lambda q, k, v: nsa_causal_attention(params["nsa"], q, k, v,
+                                                    cfg=cfg, mask=mask)
+    return lambda q, k, v: erwin_attention(q, k, v, ball_size=cfg.ball_size,
+                                           mask=mask, backend=cfg.backend)
+
+
+def _gqa_reference(entry, rep):
+    """jnp-backend output + grads, computed once per (entry, rep)."""
+    if (entry, rep) not in _GQA_REF_CACHE:
+        q, k, v, mask, cfg, params = _gqa_case(rep)
+        fn = _gqa_entry_fns(entry, cfg, params, mask)
+        out = fn(q, k, v)
+        grads = jax.grad(lambda q, k, v: jnp.sum(fn(q, k, v) ** 2),
+                         argnums=(0, 1, 2))(q, k, v)
+        _GQA_REF_CACHE[(entry, rep)] = (out, grads)
+    return _GQA_REF_CACHE[(entry, rep)]
+
+
+@pytest.mark.parametrize("name", BACKENDS)
+@pytest.mark.parametrize("rep", [1, 2, 4])
+@pytest.mark.parametrize("entry", ["bsa", "nsa", "erwin"])
+def test_gqa_parity_sweep(entry, rep, name):
+    q, k, v, mask, cfg, params = _gqa_case(rep)
+    cfg_b = dataclasses.replace(cfg, backend=name)
+    fn = _gqa_entry_fns(entry, cfg_b, params, mask)
+    want_out, want_grads = _gqa_reference(entry, rep)
+    _close(fn(q, k, v), want_out)
+    got = jax.grad(lambda q, k, v: jnp.sum(fn(q, k, v) ** 2),
+                   argnums=(0, 1, 2))(q, k, v)
+    for g, w in zip(got, want_grads):
+        _close(g, w, atol=1e-2, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
 # registry + resolution precedence
 # ---------------------------------------------------------------------------
 
@@ -273,6 +346,59 @@ def test_register_rejects_bad_plugins():
         register_backend("broken-test", object())
     with pytest.raises(ValueError, match="already registered"):
         register_backend("jnp", JnpBackend())
+
+
+# ---------------------------------------------------------------------------
+# optional gated_combine epilogue op
+# ---------------------------------------------------------------------------
+
+def test_gated_combine_routed_through_backend():
+    """A backend providing gated_combine sees the epilogue call; one without
+    it (CountingBackend) transparently falls back to the jnp reference."""
+    from repro.core.backend import get_combine
+    from repro.core.branches import gated_combine_ref
+
+    class CombiningBackend(CountingBackend):
+        name = "combining-test"
+
+        def __init__(self):
+            super().__init__()
+            self.calls["gated_combine"] = 0
+
+        def gated_combine(self, outs, gates, mask):
+            self.calls["gated_combine"] += 1
+            return gated_combine_ref(outs, gates, mask)
+
+    bk = CombiningBackend()
+    register_backend("combining-test", bk, overwrite=True)
+    q, k, v, mask = _qkv()
+    cfg = BSAConfig(**CFG_KW, backend="combining-test")
+    params = bsa_init(jax.random.fold_in(KEY, 1), cfg, n_heads=4, n_kv_heads=2,
+                      head_dim=16, d_model=64)
+    out = bsa_attention(params, q, k, v, cfg=cfg, mask=mask)
+    assert bk.calls["gated_combine"] == 1
+    _close(out, bsa_attention(params, q, k, v,
+                              cfg=dataclasses.replace(cfg, backend="jnp"),
+                              mask=mask), atol=1e-6, rtol=1e-6)
+
+    # a 4-op plug-in (no gated_combine) resolves to the reference epilogue
+    plain = CountingBackend()
+    assert get_combine(plain) is gated_combine_ref
+    assert get_combine(bk) == bk.gated_combine
+
+
+def test_pallas_gated_combine_matches_reference():
+    from repro.core.backend import get_backend
+    from repro.core.branches import gated_combine_ref
+
+    B, N, H, D = 2, 32, 4, 16
+    ks = jax.random.split(KEY, 6)
+    outs = tuple(jax.random.normal(ks[i], (B, N, H, D)) for i in range(3))
+    gates = tuple(jax.nn.sigmoid(jax.random.normal(ks[3 + i], (1, 1, H, 1)))
+                  for i in range(3))
+    mask = jnp.ones((B, N), bool).at[:, -8:].set(False)
+    got = get_backend("interpret").gated_combine(outs, gates, mask)
+    _close(got, gated_combine_ref(outs, gates, mask), atol=1e-5, rtol=1e-5)
 
 
 # ---------------------------------------------------------------------------
