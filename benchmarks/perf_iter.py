@@ -151,8 +151,12 @@ def time_kernel_train_step(args) -> None:
     With ``--batch B > 1`` the same step is ALSO timed as B sequential
     single-sample calls (the pre-ragged-batching trainer pattern) and both
     are reported as points/sec — the batched-path speedup measurement.
-    ``--ragged`` packs a mixed-size batch (per-sample masks) instead of a
-    dense one, matching the variable-size geometry pipeline.
+    ``--ragged`` builds a HIGH-VARIANCE mixed-size batch (sizes spanning N
+    down to max(N//8, ball)) and times it BOTH ways: bucket-padded dummy
+    slots (per-sample masks, the classic layout) and packed-varlen (one
+    concatenated axis + offsets, ``bsa_attention_varlen`` — docs/varlen.md).
+    The packed numbers are the headline record; the padded ones ride along
+    so the padding-waste delta is visible in the same JSON.
 
     ``--autotune`` enables the tile autotuner (``kernels/tuning.py``): cache
     misses are measured with timed kernel runs and persisted to the JSON
@@ -187,8 +191,11 @@ def time_kernel_train_step(args) -> None:
     k = jax.random.normal(ks[1], (B, N, Hkv, D), jnp.float32)
     v = jax.random.normal(ks[2], (B, N, Hkv, D), jnp.float32)
     if args.ragged:
-        # mixed-size batch: sample i keeps a decreasing prefix of real tokens
-        lens = [N - (i * (N // 2) // max(B - 1, 1)) for i in range(B)]
+        # HIGH-VARIANCE mixed-size batch: sizes span N down to max(N//8,
+        # ball) — the regime where dummy-padded slots waste the most FLOPs
+        # and the packed-varlen layout pays off hardest (docs/varlen.md)
+        lo = max(N // 8, ball)
+        lens = [max(lo, N - i * (N - lo) // max(B - 1, 1)) for i in range(B)]
         mask = jnp.stack([jnp.arange(N) < n for n in lens])
         n_pts = sum(lens)
     else:
@@ -224,6 +231,54 @@ def time_kernel_train_step(args) -> None:
          f"mode={mode};heads={Hq}/{Hkv};d={D};points_per_sec={pps:.0f};"
          f"peak_bytes={peak_bytes}")
 
+    packed_stats = None
+    if args.ragged:
+        # the same mixed batch on the PACKED-VARLEN layout: per-sample
+        # ball-padded slices concatenated on one axis, offsets instead of
+        # dummy batch slots (core.bsa.bsa_attention_varlen)
+        from repro.core import bsa_attention_varlen
+        padded_lens = [-(-n_i // ball) * ball for n_i in lens]
+        total = sum(padded_lens)
+        offs_list = [0]
+        for pl in padded_lens:
+            offs_list.append(offs_list[-1] + pl)
+        offs = jnp.asarray(offs_list, jnp.int32)
+        qp = jnp.concatenate([q[i, :padded_lens[i]] for i in range(B)], axis=0)
+        kp = jnp.concatenate([k[i, :padded_lens[i]] for i in range(B)], axis=0)
+        vp = jnp.concatenate([v[i, :padded_lens[i]] for i in range(B)], axis=0)
+        maskp = jnp.concatenate(
+            [jnp.arange(padded_lens[i]) < lens[i] for i in range(B)])
+
+        def loss_pk(p, q, k, v, m):
+            return jnp.sum(bsa_attention_varlen(p, q, k, v, cfg=cfg,
+                                                offsets=offs, mask=m) ** 2)
+
+        step_pk = jax.jit(jax.value_and_grad(loss_pk))
+
+        def run_pk(p, q, k, v, m):
+            out, grads = step_pk(p, q, k, v, m)
+            return out
+
+        us_pk = time_fn(run_pk, params, qp, kp, vp, maskp, warmup=2, iters=5)
+        try:
+            ma = step_pk.lower(params, qp, kp, vp, maskp).compile() \
+                        .memory_analysis()
+            peak_pk = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                       + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+        except Exception:
+            peak_pk = None
+        pps_pk = n_pts / (us_pk / 1e6)
+        emit(f"perf_iter/kernel_train_step_b{B}_n{N}_packed", us_pk,
+             f"mode={mode};points_per_sec={pps_pk:.0f};peak_bytes={peak_pk};"
+             f"rows={total}vs{B * N}")
+        print(f"# packed-varlen vs bucket-padded: {us / us_pk:.2f}x "
+              f"points/sec ({pps_pk:.0f} vs {pps:.0f}); "
+              f"{total} packed rows vs {B * N} padded", flush=True)
+        packed_stats = {"us_per_step": round(us_pk, 1),
+                        "points_per_sec": round(pps_pk, 1),
+                        "peak_bytes": peak_pk,
+                        "packed_rows": total, "padded_rows": B * N}
+
     record = {
         "shape": {"batch": B, "n": N, "heads": Hq, "kv_heads": Hkv,
                   "head_dim": D, "ragged": bool(args.ragged)},
@@ -231,6 +286,15 @@ def time_kernel_train_step(args) -> None:
         "us_per_step": round(us, 1), "points_per_sec": round(pps, 1),
         "peak_bytes": peak_bytes,
     }
+    if packed_stats is not None:
+        # headline = packed (what the gate tracks); padded rides along
+        record["padded"] = {"us_per_step": round(us, 1),
+                            "points_per_sec": round(pps, 1),
+                            "peak_bytes": peak_bytes}
+        record["packed"] = packed_stats
+        record.update(us_per_step=packed_stats["us_per_step"],
+                      points_per_sec=packed_stats["points_per_sec"],
+                      peak_bytes=packed_stats["peak_bytes"])
     if args.bench_json:
         Path(args.bench_json).write_text(json.dumps(record, indent=1) + "\n")
         print(f"# wrote {args.bench_json}", flush=True)
@@ -266,14 +330,19 @@ def time_kernel_train_step(args) -> None:
 
 def _check_regression(record: dict, baseline_path: str, max_regression: float):
     """CI gate: fail when throughput regressed > max_regression vs the
-    committed baseline record (its 'after' entry, or a flat record)."""
+    committed baseline record.  Ragged records compare against the
+    baseline's ``ragged_varlen.packed`` entry; dense ones against its
+    ``after`` entry (or a flat record)."""
     p = Path(baseline_path)
     if not p.exists():
         print(f"# baseline {baseline_path} missing — regression gate skipped",
               flush=True)
         return
     base = json.loads(p.read_text())
-    base = base.get("after", base)               # before/after trajectory file
+    if record["shape"].get("ragged") and "ragged_varlen" in base:
+        base = base["ragged_varlen"].get("packed", {})
+    else:
+        base = base.get("after", base)           # before/after trajectory file
     base_pps = base.get("points_per_sec")
     if not base_pps:
         print("# baseline has no points_per_sec — regression gate skipped",
@@ -310,7 +379,8 @@ def main():
                          "(--batch B>1 also times B sequential single-sample "
                          "steps for the batched-path comparison)")
     ap.add_argument("--ragged", action="store_true",
-                    help="kernel-step: mixed-size batch with per-sample masks")
+                    help="kernel-step: high-variance mixed-size batch, timed "
+                         "both bucket-padded and packed-varlen (offsets)")
     ap.add_argument("--autotune", action="store_true",
                     help="enable the tile autotuner (kernels/tuning.py): "
                          "measure candidate (tq, tk) grids on cache miss and "

@@ -1,6 +1,6 @@
-"""Quickstart: Ball Sparse Attention on a random point cloud, then a packed
-batch of RAGGED clouds — the two snippets the README/docs are built around
-(CI executes this file as the docs-freshness gate).
+"""Quickstart: Ball Sparse Attention on a random point cloud, a packed batch
+of RAGGED clouds, and the packed-varlen layout — the snippets the README/docs
+are built around (CI executes this file as the docs-freshness gate).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +9,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BSAConfig, bsa_attention, bsa_init, use_backend
+from repro.core import (
+    BSAConfig,
+    bsa_attention,
+    bsa_attention_varlen,
+    bsa_init,
+    pack_varlen,
+    unpack_varlen,
+    use_backend,
+)
 from repro.core.balltree import build_balltree_permutation, ragged_ball_order, unpack_ragged
 
 # 1. a point cloud (unordered!) and its features
@@ -80,3 +88,28 @@ with use_backend("interpret"):      # Pallas kernel bodies, executed as Python
     out_int = bsa_attention(params, qs, ks_, vs, cfg=cfg)
 assert np.allclose(np.asarray(out_ref), np.asarray(out_int), atol=1e-3)
 print("backend swap jnp/auto ↔ interpret: same result, zero call-site changes")
+
+# 6. PACKED-VARLEN: the same ragged clouds with NO dummy batch slots — all
+#    clouds concatenated on ONE axis, per-sample boundaries in an `offsets`
+#    array (every entry a ball multiple), so compute scales with the SUM of
+#    cloud sizes instead of B x max(n_i).  See docs/varlen.md.
+ordered = [fts[i][mask[i]] for i in range(B)]        # per-cloud, ball order
+# pad_to freezes the packed length at the tight total (per-cloud ball
+# multiples); without it the total is rounded to a geometric bucket so
+# repeated calls share jit shapes.
+tight = sum(-(-len(o) // cfg.ball_size) * cfg.ball_size for o in ordered)
+packed, offsets, maskv = pack_varlen(ordered, cfg.ball_size, pad_to=tight)
+T = packed.shape[0]
+xv = jnp.asarray(packed)
+qv = (xv @ wq).reshape(T, H, D)
+kv_ = (xv @ wk).reshape(T, H, D)
+vv = (xv @ wv).reshape(T, H, D)
+out_vl = bsa_attention_varlen(params, qv, kv_, vv, cfg=cfg,
+                              offsets=jnp.asarray(offsets),
+                              mask=jnp.asarray(maskv))
+per_cloud_vl = unpack_varlen(np.asarray(out_vl), offsets, maskv)
+print(f"packed-varlen: {T} rows vs {B * L} bucket-padded "
+      f"(offsets {offsets.tolist()})")
+for got, want in zip(per_cloud_vl, per_cloud):
+    assert np.allclose(got, want, atol=1e-4)
+print("packed-varlen == bucket-padded, per cloud: OK")

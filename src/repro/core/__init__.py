@@ -24,10 +24,15 @@ map from paper sections to modules):
     :func:`init_decode_cache` / :func:`nsa_causal_decode` for incremental
     decoding.
   * :func:`full_attention`, :func:`erwin_attention` — the paper's baselines.
+  * :func:`bsa_attention_varlen` — BSA over a PACKED-VARLEN batch: samples
+    concatenated on one unbatched (ΣNᵢ, H, D) axis with an ``offsets``
+    boundary array instead of dummy-padded batch slots (docs/varlen.md).
+    Same semantics as per-sample/bucket-padded, none of the padding FLOPs.
   * Ragged-batching helpers (re-exported from ``repro.core.balltree``):
     ``build_balltree_permutation(s)`` for host-side ball ordering,
     ``pack_ragged`` / ``unpack_ragged`` to move between variable-size clouds
-    and one fixed-shape masked batch, ``bucket_length`` for the geometric
+    and one fixed-shape masked batch, ``pack_varlen`` / ``unpack_varlen``
+    for the packed-offsets layout, ``bucket_length`` for the geometric
     padding buckets, and ``ragged_ball_order`` for the whole
     order-pack-in-one-call convenience.
 """
@@ -43,7 +48,12 @@ from repro.core.backend import (  # noqa: F401
     resolve_backend,
     use_backend,
 )
-from repro.core.bsa import bsa_init, bsa_attention, ball_attention_ref  # noqa: F401
+from repro.core.bsa import (  # noqa: F401
+    bsa_init,
+    bsa_attention,
+    bsa_attention_varlen,
+    ball_attention_ref,
+)
 from repro.core.nsa_causal import (  # noqa: F401
     nsa_init,
     nsa_causal_attention,
@@ -58,7 +68,9 @@ from repro.core.balltree import (  # noqa: F401
     build_balltree_permutation,
     build_balltree_permutations,
     pack_ragged,
+    pack_varlen,
     pad_to_multiple,
     ragged_ball_order,
     unpack_ragged,
+    unpack_varlen,
 )

@@ -31,6 +31,24 @@ A backend MAY additionally provide the optional fused epilogue op
 reference (``branches.gated_combine_ref``), so pre-existing plug-ins keep
 working unchanged.
 
+Backends MAY also provide the optional PACKED-VARLEN entry points — the
+offsets-based ragged layout of ``docs/varlen.md`` (clouds concatenated on
+one unbatched ``(ΣNᵢ, H, D)`` axis, per-sample boundaries carried by an
+``offsets`` array instead of dummy-padded batch slots):
+
+  * ``ball_varlen(q, k, v, offsets, mask, *, ball_size, chunk_tokens=0)``
+  * ``flash_varlen(q, k, v, q_offsets, k_offsets, *, key_valid=None,
+    chunk_tokens=0)`` — separate query/key offsets (the compression branch
+    attends packed tokens vs packed φ-blocks)
+  * ``local_window_varlen(q, k, v, offsets, *, window, mask=None,
+    chunk_tokens=0)``
+  * ``selection_varlen(q, k, v, top_idx, sel_valid, offsets, mask, *,
+    block_size, group_size, chunk_tokens=0)``
+
+``bsa_attention_varlen`` resolves them via :func:`get_varlen`; backends
+without them fall back to the jnp reference implementations (the parity
+oracle), so pre-existing plug-ins keep working on packed batches too.
+
 Built-ins:
 
   ``"jnp"``        pure-jnp reference (optionally memory-bounded via
@@ -92,6 +110,7 @@ __all__ = [
     "resolve_backend_name",
     "resolve_branch_backends",
     "get_combine",
+    "get_varlen",
 ]
 
 ENV_VAR = "REPRO_ATTENTION_BACKEND"
@@ -207,6 +226,54 @@ class JnpBackend:
         from repro.core.branches import gated_combine_ref
         return gated_combine_ref(outs, gates, mask)
 
+    # -- packed-varlen (offsets-based) entry points: q (T,Hq,D); k/v (L,Hkv,D).
+    # These ARE the parity oracle for kernel backends' varlen paths: segment
+    # isolation is expressed as explicit logit bias on the reference math.
+
+    def ball_varlen(self, q, k, v, offsets, mask, *, ball_size, chunk_tokens=0):
+        # offsets are ball multiples by contract, so balls never straddle a
+        # sample boundary — packed ball attention IS B=1 ball attention.
+        return self.ball(q[None], k[None], v[None],
+                         None if mask is None else mask[None],
+                         ball_size=ball_size, chunk_tokens=chunk_tokens)[0]
+
+    def flash_varlen(self, q, k, v, q_offsets, k_offsets, *, key_valid=None,
+                     chunk_tokens=0):
+        from repro.core.branches import chunked_q_attention
+        from repro.numerics import segment_ids_from_offsets
+        qb = q[None]
+        kb, vb = self._rep(qb, k[None], v[None])
+        q_seg = segment_ids_from_offsets(q_offsets, q.shape[0])
+        k_seg = segment_ids_from_offsets(k_offsets, k.shape[0])
+        return chunked_q_attention(
+            qb, kb, vb,
+            key_valid=None if key_valid is None else key_valid[None],
+            chunk=chunk_tokens, q_seg=q_seg, k_seg=k_seg)[0]
+
+    def local_window_varlen(self, q, k, v, offsets, *, window, mask=None,
+                            chunk_tokens=0):
+        from repro.core.nsa_causal import local_window_attention_ref
+        from repro.numerics import segment_ids_from_offsets
+        qb = q[None]
+        kb, vb = self._rep(qb, k[None], v[None])
+        seg = segment_ids_from_offsets(offsets, q.shape[0])
+        blk_seg = seg.reshape(q.shape[0] // window, window)[:, 0]
+        cb = max(chunk_tokens // window, 1) if chunk_tokens else 0
+        return local_window_attention_ref(
+            qb, kb, vb, window, mask=None if mask is None else mask[None],
+            chunk_blocks=cb, block_seg=blk_seg)[0]
+
+    def selection_varlen(self, q, k, v, top_idx, sel_valid, offsets, mask, *,
+                         block_size, group_size, chunk_tokens=0):
+        # cross-sample isolation lives in the SCORES (a group's candidate
+        # blocks from other samples are NEG_INF → sel_valid False), so the
+        # packed gather-attend is B=1 selection attention.
+        return self.selection(q[None], k[None], v[None], top_idx[None],
+                              sel_valid[None],
+                              None if mask is None else mask[None],
+                              block_size=block_size, group_size=group_size,
+                              chunk_tokens=chunk_tokens)[0]
+
 
 # ---------------------------------------------------------------------------
 # Built-in: Pallas kernels (compiled on TPU, interpret elsewhere)
@@ -256,6 +323,37 @@ class PallasBackend:
     def gated_combine(self, outs, gates, mask):
         from repro.kernels import ops as kops
         return kops.gated_combine(outs, gates, mask, interpret=self.interpret)
+
+    # -- packed-varlen entry points (``kernels/ops.py`` wrappers; the flash
+    # one runs the dedicated segment-masked tile-skipping varlen kernel) --
+
+    def ball_varlen(self, q, k, v, offsets, mask, *, ball_size, chunk_tokens=0):
+        from repro.kernels import ops as kops
+        return kops.ball_attention_varlen(q, k, v, offsets, mask, ball_size,
+                                          interpret=self.interpret)
+
+    def flash_varlen(self, q, k, v, q_offsets, k_offsets, *, key_valid=None,
+                     chunk_tokens=0):
+        from repro.kernels import ops as kops
+        return kops.flash_attention_varlen(q, k, v, q_offsets, k_offsets,
+                                           key_valid=key_valid,
+                                           interpret=self.interpret)
+
+    def local_window_varlen(self, q, k, v, offsets, *, window, mask=None,
+                            chunk_tokens=0):
+        from repro.kernels import ops as kops
+        return kops.local_window_attention_varlen(q, k, v, offsets, window,
+                                                  mask=mask,
+                                                  interpret=self.interpret)
+
+    def selection_varlen(self, q, k, v, top_idx, sel_valid, offsets, mask, *,
+                         block_size, group_size, chunk_tokens=0):
+        from repro.kernels import ops as kops
+        return kops.selection_attention_varlen(q, k, v, top_idx, sel_valid,
+                                               offsets, mask,
+                                               block_size=block_size,
+                                               group_size=group_size,
+                                               interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -387,6 +485,23 @@ def get_combine(backend: Backend):
         return fn
     from repro.core.branches import gated_combine_ref
     return gated_combine_ref
+
+
+def get_varlen(backend: Backend, op: str):
+    """The backend's packed-varlen entry point ``<op>_varlen``, or the jnp
+    reference's if the backend doesn't provide one.
+
+    ``op`` is one of ``"ball"``, ``"flash"``, ``"local_window"``,
+    ``"selection"``.  Like :func:`get_combine`, the varlen ops are OPTIONAL
+    protocol extensions: a plug-in registered before the packed layout
+    existed still serves packed batches through the jnp oracle with
+    identical semantics (just without the kernel speed).
+    """
+    name = f"{op}_varlen"
+    fn = getattr(backend, name, None)
+    if callable(fn):
+        return fn
+    return getattr(get_backend("jnp"), name)
 
 
 register_backend("jnp", JnpBackend())

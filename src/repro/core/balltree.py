@@ -26,6 +26,8 @@ __all__ = [
     "pack_ragged",
     "pack_items",
     "unpack_ragged",
+    "pack_varlen",
+    "unpack_varlen",
     "ball_ids",
 ]
 
@@ -136,13 +138,20 @@ def bucket_length(n: int, multiple: int, *, geometric: bool = True) -> int:
 
 def pack_ragged(arrays, multiple: int, *, pad_to: int | None = None,
                 value: float = 0.0, geometric: bool = False):
-    """Stack variable-length arrays into one padded batch.
+    """Stack variable-length arrays into one BUCKET-PADDED batch.
 
     ``arrays``: sequence of (n_i, ...) numpy arrays sharing trailing dims.
     Each is padded along axis 0 to a common length L — ``pad_to`` if given
     (must already be ≥ every n_i and a multiple of ``multiple``), else
     ``bucket_length(max n_i)``.  Returns ``(batch (B, L, ...), mask (B, L))``
     with mask True on real rows.  The inverse is :func:`unpack_ragged`.
+
+    This is the PADDED-BUCKET layout: every sample occupies a full L-row
+    batch slot, so padding rows of small samples burn real FLOPs/memory in
+    every kernel (masked, so the *results* are exact — only the work is
+    wasted).  For size-diverse batches prefer the packed-varlen layout
+    (:func:`pack_varlen` — one concatenated axis + an offsets array, total
+    length ∝ Σ nᵢ instead of B · max nᵢ); see ``docs/varlen.md``.
     """
     arrays = [np.asarray(a) for a in arrays]
     if not arrays:
@@ -166,11 +175,103 @@ def pack_ragged(arrays, multiple: int, *, pad_to: int | None = None,
 
 def unpack_ragged(batch: np.ndarray, mask: np.ndarray) -> list[np.ndarray]:
     """Inverse of :func:`pack_ragged`: split a padded batch back into the
-    per-sample arrays (padding rows dropped).  Assumes masks are prefix-true
-    (real rows first), which is what pack_ragged produces."""
+    per-sample arrays (padding rows dropped).  Assumes each sample's mask is
+    prefix-true (real rows first), which is what pack_ragged produces.
+    The packed-varlen counterpart is :func:`unpack_varlen`."""
     batch = np.asarray(batch)
     mask = np.asarray(mask)
     return [batch[i, : int(mask[i].sum())] for i in range(batch.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# Packed-varlen layout: one concatenated axis + offsets (the cu_seqlens idiom)
+#
+# Instead of a (B, L, ...) batch padded to the largest sample, all samples
+# are concatenated along ONE axis of total length T = Σ paddedᵢ, with an
+# ``offsets`` array marking per-sample boundaries — the layout NSA-style
+# varlen kernels consume.  Work then scales with the actual token count, not
+# B · max nᵢ.  Contract (consumed by ``kernels/ops.py`` varlen wrappers and
+# ``core.bsa.bsa_attention_varlen``):
+#
+#   packed  (T, ...)       samples back-to-back; each padded to a multiple
+#                          of ``multiple`` (the ball size) so balls / φ
+#                          blocks / selection groups never straddle samples
+#   offsets (S+1,) int32   sample i owns rows [offsets[i], offsets[i+1]);
+#                          every entry is a multiple of ``multiple``;
+#                          monotone non-decreasing.  TRAILING REPEATS are
+#                          legal and mean empty segments — they keep the
+#                          offsets SHAPE static across batches (jit).
+#   mask    (T,) bool      True on real rows (per-sample padding and the
+#                          capacity tail are False); prefix-true within
+#                          each segment
+#
+# Rows at/after offsets[-1] are capacity padding shared by no sample.
+# ---------------------------------------------------------------------------
+
+def pack_varlen(arrays, multiple: int, *, pad_to: int | None = None,
+                max_samples: int | None = None, value: float = 0.0,
+                geometric: bool = True):
+    """Concatenate variable-length arrays into ONE packed axis + offsets.
+
+    ``arrays``: sequence of (n_i, ...) numpy arrays sharing trailing dims.
+    Each sample is padded to the next multiple of ``multiple`` and the padded
+    samples are laid back-to-back.  Returns
+    ``(packed (T, ...), offsets (S+1,) int32, mask (T,))`` per the contract
+    above.
+
+    ``pad_to`` freezes the packed capacity T (must be a multiple of
+    ``multiple`` and ≥ the packed total); otherwise T is
+    ``bucket_length(total)`` — geometric buckets by default, so jit sees
+    O(log size-range) distinct packed shapes regardless of the size MIX.
+    ``max_samples`` pads ``offsets`` to a static ``(max_samples + 1,)`` by
+    repeating the final boundary (empty trailing segments).
+
+    Inverse: :func:`unpack_varlen`.  Bucket-padded counterpart (one batch
+    slot per sample): :func:`pack_ragged`.
+    """
+    arrays = [np.asarray(a) for a in arrays]
+    if not arrays:
+        raise ValueError("pack_varlen needs at least one array")
+    if max_samples is not None and len(arrays) > max_samples:
+        raise ValueError(f"{len(arrays)} samples > max_samples={max_samples}")
+    lengths = [a.shape[0] for a in arrays]
+    padded = [-(-n // multiple) * multiple for n in lengths]
+    total = sum(padded)
+    if pad_to is None:
+        cap = bucket_length(total, multiple, geometric=geometric)
+    else:
+        if pad_to % multiple or pad_to < total:
+            raise ValueError(f"pad_to={pad_to} must be a multiple of "
+                             f"{multiple} and ≥ packed total {total}")
+        cap = pad_to
+    n_seg = max_samples if max_samples is not None else len(arrays)
+    offsets = np.zeros((n_seg + 1,), dtype=np.int32)
+    offsets[1:len(arrays) + 1] = np.cumsum(padded)
+    offsets[len(arrays) + 1:] = total          # trailing repeats: empty segments
+    packed = np.full((cap,) + arrays[0].shape[1:], value, dtype=arrays[0].dtype)
+    mask = np.zeros((cap,), dtype=bool)
+    for a, n, start in zip(arrays, lengths, offsets[:len(arrays)]):
+        packed[start:start + n] = a
+        mask[start:start + n] = True
+    return packed, offsets, mask
+
+
+def unpack_varlen(packed: np.ndarray, offsets: np.ndarray,
+                  mask: np.ndarray | None = None) -> list[np.ndarray]:
+    """Inverse of :func:`pack_varlen`: split the packed axis back into
+    per-sample arrays.  With ``mask``, per-sample padding rows are dropped
+    (masks are prefix-true within each segment); without it, each sample
+    comes back at its padded length.  Empty trailing segments (repeated
+    offsets) yield empty arrays."""
+    packed = np.asarray(packed)
+    offsets = np.asarray(offsets)
+    outs = []
+    for i in range(offsets.shape[0] - 1):
+        a, b = int(offsets[i]), int(offsets[i + 1])
+        if mask is not None:
+            b = a + int(np.asarray(mask[a:b]).sum())
+        outs.append(packed[a:b])
+    return outs
 
 
 def pack_items(items: list[dict], pad_to: int | None) -> dict:

@@ -256,12 +256,15 @@ def selection_attend(q, k, v, top_idx, sel_valid, mask, *, block_size: int,
 
 
 def chunked_q_attention(q, k, v, *, key_valid=None, block_causal_ell: int = 0,
-                        chunk: int = 0):
+                        chunk: int = 0, q_seg=None, k_seg=None):
     """Dense attention of q vs (small) K/V with optional query chunking.
 
     q: (B,N,H,D); k/v: (B,L,H,D) same head count; key_valid: (B,L) bool.
     block_causal_ell>0 applies the compression-branch causal rule:
-    query t attends key j iff (j+1)·ell − 1 < t."""
+    query t attends key j iff (j+1)·ell − 1 < t.
+    ``q_seg``/``k_seg`` (given together): (N,)/(L,) int32 segment ids shared
+    across the batch — packed-varlen isolation, a query only attends keys of
+    its own segment (``numerics.segment_ids_from_offsets``)."""
     B, N, H, D = q.shape
     L = k.shape[1]
     kh = k.transpose(0, 2, 1, 3)
@@ -275,6 +278,8 @@ def chunked_q_attention(q, k, v, *, key_valid=None, block_causal_ell: int = 0,
         if block_causal_ell:
             end = (jnp.arange(L) + 1) * block_causal_ell - 1
             bias = bias + mask_to_bias(end[None, :] < pos[:, None])[None, None]
+        if q_seg is not None:
+            bias = bias + mask_to_bias(q_seg[pos][:, None] == k_seg[None, :])[None, None]
         return sdpa(qc, kh, vh, bias)
 
     qh = q.transpose(0, 2, 1, 3)                                  # (B,H,N,D)

@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.backend import get_combine, resolve_branch_backends
+from repro.core.backend import get_combine, get_varlen, resolve_branch_backends
 from repro.core.branches import (
     NEG_INF,
     block_validity,
@@ -34,8 +34,10 @@ from repro.core.branches import (
     sdpa,
 )
 from repro.core.config import BSAConfig
+from repro.numerics import segment_ids_from_offsets
 
-__all__ = ["bsa_init", "bsa_attention", "ball_attention_ref"]
+__all__ = ["bsa_init", "bsa_attention", "bsa_attention_varlen",
+           "ball_attention_ref"]
 
 
 # ---------------------------------------------------------------------------
@@ -132,11 +134,17 @@ def _compression_branch(params, q, k, v, mask, cfg: BSAConfig, backend):
 # Branch 3 — Selection
 # ---------------------------------------------------------------------------
 
-def _selection_scores(params, q, k_cmp, blk_valid, mask, cfg: BSAConfig):
+def _selection_scores(params, q, k_cmp, blk_valid, mask, cfg: BSAConfig,
+                      q_seg=None):
     """Group-level importance scores.
 
     Returns (scores, n_groups, rows_are_blocks):
       scores: (B, G, Hkv, NB) fp32, already masked (invalid block / own ball).
+
+    ``q_seg``: (N,) int32 per-token segment ids for a packed-varlen axis
+    (shared across the batch dim, which is 1 there) — candidate blocks of
+    OTHER segments are scored NEG_INF, so top-k never selects across a
+    sample boundary and ``sel_valid`` goes False for any that slip in.
     """
     B, N, Hq, D = q.shape
     Hkv = k_cmp.shape[2]
@@ -171,6 +179,14 @@ def _selection_scores(params, q, k_cmp, blk_valid, mask, cfg: BSAConfig):
         blk_ball = (jnp.arange(nb) * ell) // cfg.ball_size
         own = grp_ball[:, None] == blk_ball[None, :]                # (G,NB)
         s = jnp.where(own[None, :, None, :], NEG_INF, s)
+    if q_seg is not None:
+        # packed-varlen: a group may only select blocks of its own segment.
+        # Offsets are ball_size multiples and groups/blocks subdivide balls,
+        # so each group/block is wholly inside one segment — [:, 0] suffices.
+        grp_seg = q_seg.reshape(s.shape[1], N // s.shape[1])[:, 0]  # (G,)
+        blk_seg = q_seg.reshape(nb, ell)[:, 0]                      # (NB,)
+        same = grp_seg[:, None] == blk_seg[None, :]
+        s = jnp.where(same[None, :, None, :], s, NEG_INF)
     return s
 
 
@@ -233,4 +249,84 @@ def bsa_attention(params: dict, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     if return_aux:
         return out, {"ball": out_ball, "cmp": out_cmp, "slc": out_slc,
                      "indices": top_idx, "gates": gates}
+    return out
+
+
+def bsa_attention_varlen(params: dict, q: jnp.ndarray, k: jnp.ndarray,
+                         v: jnp.ndarray, *, cfg: BSAConfig,
+                         offsets: jnp.ndarray,
+                         mask: jnp.ndarray | None = None,
+                         x: jnp.ndarray | None = None,
+                         return_aux: bool = False):
+    """Ball Sparse Attention over a PACKED-VARLEN batch (``docs/varlen.md``).
+
+    q: (T, Hq, D); k, v: (T, Hkv, D) — all samples concatenated on one
+    unbatched token axis of capacity T.  ``offsets``: (S+1,) int32 sample
+    boundaries, each a multiple of ``cfg.ball_size`` (what
+    ``core.balltree.pack_varlen`` emits); trailing repeats are empty slots
+    that keep the shape static under jit.  ``mask``: (T,) bool with True on
+    real tokens — pass the one from ``pack_varlen`` so per-sample padding
+    and the capacity tail beyond ``offsets[-1]`` are masked (without it the
+    tail rows compute garbage; real rows are isolated regardless).
+
+    Semantically identical to running each sample alone (or bucket-padded
+    via :func:`bsa_attention`): every branch isolates samples — ball and
+    selection structurally (offsets are ball multiples, and a group only
+    selects blocks of its own segment), compression and local windows via
+    in-kernel segment-id masking — but no padding FLOPs are spent on dummy
+    batch slots.  ``x`` is the pre-projection input for token gating, shape
+    (T, d_model).  Returns (T, Hq, D) [+ aux dict].
+    """
+    T, Hq, D = q.shape
+    assert k.shape[0] == T and v.shape == k.shape
+    assert Hq % k.shape[1] == 0, "q heads must be a multiple of kv heads"
+    ell = cfg.cmp_block
+    nb = T // ell
+    ct = cfg.jnp_chunk_tokens
+    maskb = None if mask is None else mask[None]
+
+    bk = resolve_branch_backends(cfg)
+    seg = segment_ids_from_offsets(offsets, T)
+
+    # ball branch — block-diagonal by construction (offsets ∈ ball multiples)
+    out_ball = get_varlen(bk["ball"], "ball")(
+        q, k, v, offsets, mask, ball_size=cfg.ball_size, chunk_tokens=ct)
+
+    # compression branch — packed tokens vs packed φ-blocks; block offsets
+    # are exact because sample boundaries are ball (hence ℓ) multiples
+    k_cmp = phi_apply(params["phi_k"], k[None], maskb, cfg)[0]     # (NB,Hkv,D)
+    v_cmp = phi_apply(params["phi_v"], v[None], maskb, cfg)[0]
+    blk_valid = block_validity(maskb, 1, T, ell)                   # (1,NB)
+    k_off = offsets // ell
+    flash_vl = get_varlen(bk["cmp"], "flash")
+    if cfg.group_compression:
+        q_cmp = phi_apply(params["phi_q"], q[None], maskb, cfg)[0]
+        out_c = flash_vl(q_cmp, k_cmp, v_cmp, k_off, k_off,
+                         key_valid=blk_valid[0], chunk_tokens=ct)  # (NB,Hq,D)
+        out_cmp = jnp.broadcast_to(out_c[:, None],
+                                   (nb, ell, Hq, D)).reshape(T, Hq, D)
+    else:
+        out_cmp = flash_vl(q, k_cmp, v_cmp, offsets, k_off,
+                           key_valid=blk_valid[0], chunk_tokens=ct)
+
+    # selection branch — scores get segment isolation on top of the usual
+    # validity/own-ball masking, then the gather-attend is layout-agnostic
+    scores = _selection_scores(params, q[None], k_cmp[None], blk_valid,
+                               maskb, cfg, q_seg=seg)              # (1,G,Hkv,NB)
+    G = scores.shape[1]
+    k_star = min(cfg.top_k, nb)
+    top_vals, top_idx = jax.lax.top_k(scores, k_star)
+    sel_valid = top_vals > NEG_INF / 2
+    out_slc = get_varlen(bk["slc"], "selection")(
+        q, k, v, top_idx[0], sel_valid[0], offsets, mask,
+        block_size=ell, group_size=T // G, chunk_tokens=ct)
+
+    gates = gate_values(params["gates"], cfg,
+                        None if x is None else x[None], Hq)
+    out = get_combine(bk["ball"])(
+        (out_ball[None], out_cmp[None], out_slc[None]),
+        (gates["ball"], gates["cmp"], gates["slc"]), maskb)[0]
+    if return_aux:
+        return out, {"ball": out_ball, "cmp": out_cmp, "slc": out_slc,
+                     "indices": top_idx[0], "gates": gates}
     return out

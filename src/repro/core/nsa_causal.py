@@ -71,13 +71,17 @@ def nsa_init(key, cfg: BSAConfig, *, n_heads: int, n_kv_heads: int, head_dim: in
 # ---------------------------------------------------------------------------
 
 def local_window_attention_ref(q, k, v, window: int, mask=None,
-                               chunk_blocks: int = 0):
+                               chunk_blocks: int = 0, block_seg=None):
     """Blocked local causal attention (pure-jnp reference).
 
     q,k,v: (B, N, H, D) with equal head counts.  Query block i attends to
     block i (causal) and block i-1 (full).  ``mask``: (B, N) bool key
     validity (True = real token) for packed ragged batches, or None.
-    ``chunk_blocks`` > 0 bounds temp memory via lax.map tiles over blocks."""
+    ``chunk_blocks`` > 0 bounds temp memory via lax.map tiles over blocks.
+    ``block_seg``: (nb,) int32 per-BLOCK segment ids (packed-varlen layout,
+    offsets multiples of ``window``) — the previous-block half is masked off
+    whenever block i-1 belongs to a different segment, so windows never leak
+    across sample boundaries."""
     B, N, H, D = q.shape
     w = window
     assert N % w == 0, f"N={N} not a multiple of local window {w}"
@@ -98,6 +102,14 @@ def local_window_attention_ref(q, k, v, window: int, mask=None,
     bias_first = mask_to_bias(first)
     biases = jnp.where((jnp.arange(nb) == 0)[:, None, None], bias_first[None], bias[None])
     biases = biases[None, :, None]                                  # (1,nb,1,w,2w)
+    if block_seg is not None:
+        # kill the prev-block half where block i-1 is a different segment
+        prev_ok = jnp.concatenate([jnp.zeros((1,), bool),
+                                   block_seg[1:] == block_seg[:-1]])
+        prev_allow = jnp.concatenate(
+            [jnp.broadcast_to(prev_ok[:, None], (nb, w)),
+             jnp.ones((nb, w), bool)], axis=1)                      # (nb,2w)
+        biases = biases + mask_to_bias(prev_allow)[None, :, None, None, :]
     if mask is not None:
         mb = mask.reshape(B, nb, w)
         mprev = jnp.concatenate([jnp.ones_like(mb[:, :1]), mb[:, :-1]], axis=1)

@@ -165,7 +165,21 @@ class ShapeNetCarDataset:
         """Yield packed batches {feats (B,L,7), target (B,L,1), mask (B,L)}.
 
         L is ``pad_to`` if given (static shapes → one jit compilation), else
-        the largest sample length in the batch (already a ball multiple)."""
+        the largest sample length in the batch (already a ball multiple).
+
+        .. deprecated:: ``pad_to=`` bucket padding spends FLOPs on dummy
+           rows in every slot shorter than L.  Prefer the packed-varlen
+           layout — ``core.balltree.pack_varlen`` + an ``offsets`` batch key
+           (or ``GeometryEngine``'s default packed mode); see docs/varlen.md.
+        """
+        if pad_to is not None:
+            import warnings
+            warnings.warn(
+                "batches(pad_to=...) bucket padding is deprecated; prefer "
+                "the packed-varlen layout (core.balltree.pack_varlen + an "
+                "'offsets' batch key, or GeometryEngine's packed mode) — "
+                "see docs/varlen.md",
+                DeprecationWarning, stacklevel=2)
         rng = np.random.default_rng(seed)
         epoch = 0
         while epochs is None or epoch < epochs:

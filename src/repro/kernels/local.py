@@ -40,20 +40,24 @@ from repro.kernels.common import (NEG_INF, interpret_batch_map, lse_finalize,
 __all__ = ["local_window_kernel_call"]
 
 
-def _window_mask(s, i, *, rows, w):
+def _window_mask(s, i, *, rows, w, same_prev):
     """Causal-within-self + full-prev mask for the fused (rep·w, 2w) tile.
 
     Row r is query position r % w of the block (rep-major layout), so every
-    GQA head of the group shares one mask row."""
+    GQA head of the group shares one mask row.  ``same_prev`` (traced scalar
+    bool) is False when the previous block belongs to a DIFFERENT packed
+    sample — the varlen boundary case — which hides the prev half entirely,
+    exactly like block 0 (dense batches pass all-equal segment ids, so it is
+    always True there)."""
     qi = jax.lax.broadcasted_iota(jnp.int32, (rows, 2 * w), 0) % w
     ki = jax.lax.broadcasted_iota(jnp.int32, (rows, 2 * w), 1)
     ok = ki <= qi + w                                      # prev full + self causal
-    ok = ok & ((i > 0) | (ki >= w))                        # block 0 has no prev
-    return jnp.where(ok, s, NEG_INF)
+    ok = ok & (((i > 0) & same_prev) | (ki >= w))          # no prev: block 0 /
+    return jnp.where(ok, s, NEG_INF)                       # sample boundary
 
 
 def _fwd_kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, bs_ref, bp_ref,
-                o_ref, lse_ref, *, scale: float, w: int):
+                ss_ref, sp_ref, o_ref, lse_ref, *, scale: float, w: int):
     i = pl.program_id(1)
     rep, _, D = q_ref.shape[1:]
     rows = rep * w
@@ -64,7 +68,8 @@ def _fwd_kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, bs_ref, bp_ref,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     s = s + bias
-    s = _window_mask(s, i, rows=rows, w=w)
+    s = _window_mask(s, i, rows=rows, w=w,
+                     same_prev=sp_ref[0, 0] == ss_ref[0, 0])
     mx = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), NEG_INF / 2)
     p = jnp.exp(s - mx)
     p = jnp.where(s <= NEG_INF / 2, 0.0, p)
@@ -77,6 +82,7 @@ def _fwd_kernel(q_ref, ks_ref, vs_ref, kp_ref, vp_ref, bs_ref, bp_ref,
 
 
 def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref, bs_ref, bp_ref,
+                ss_ref, sp_ref, sn_ref,
                 dos_ref, don_ref, lses_ref, lsen_ref, dels_ref, deln_ref,
                 dq_ref, dk_ref, dv_ref, *, scale: float, w: int, n_b: int):
     i = pl.program_id(1)
@@ -94,7 +100,8 @@ def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref, bs_ref, bp_ref,
     s = jax.lax.dot_general(qs, kcat, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     s = s + bcat
-    s = _window_mask(s, i, rows=rows, w=w)
+    s = _window_mask(s, i, rows=rows, w=w,
+                     same_prev=sp_ref[0, 0] == ss_ref[0, 0])
     p = p_from_lse(s, lses_ref[0].reshape(rows, 1))        # (rep·w, 2w)
     dp = jax.lax.dot_general(dos, vcat, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
@@ -119,9 +126,12 @@ def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref, bs_ref, bp_ref,
     sn = jax.lax.dot_general(qn, ks, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32) * scale
     sn = sn + bs_ref[0]
-    # kill the clamped self-fetch at the last block in LOGIT space: its
-    # anti-causal logits can exceed lse, and exp-then-zero would give inf·0
-    sn = jnp.where(i < n_b - 1, sn, NEG_INF)
+    # kill the clamped self-fetch in LOGIT space when no real next block
+    # exists (last block, or the next block starts a different packed
+    # sample): its anti-causal logits can exceed lse, and exp-then-zero
+    # would give inf·0
+    sn = jnp.where((i < n_b - 1) & (sn_ref[0, 0] == ss_ref[0, 0]),
+                   sn, NEG_INF)
     pn = p_from_lse(sn, lsen_ref[0].reshape(rows, 1))      # (rep·w, w)
     dv = dv + jax.lax.dot_general(pn, don, (((0,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
@@ -134,30 +144,34 @@ def _bwd_kernel(qs_ref, qn_ref, ks_ref, kp_ref, vs_ref, vp_ref, bs_ref, bp_ref,
     dv_ref[0] = dv.astype(dv_ref.dtype)
 
 
-def _fwd_call(q, k, v, key_bias, *, window, n_heads, interpret):
+def _fwd_call(q, k, v, key_bias, blk_seg, *, window, n_heads, interpret):
     BH, rep, N, D = q.shape
     w = window
     H = n_heads                                            # KV heads
     assert N % w == 0
+    n_b = N // w
     q_blk = pl.BlockSpec((1, rep, w, D), lambda b, i: (b, 0, i, 0))
     self_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, i, 0))
     prev_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
     bias_self = pl.BlockSpec((1, w), lambda b, i: (b // H, i))
     bias_prev = pl.BlockSpec((1, w), lambda b, i: (b // H, jnp.maximum(i - 1, 0)))
+    seg_self = pl.BlockSpec((1, 1), lambda b, i: (b // H, i))
+    seg_prev = pl.BlockSpec((1, 1), lambda b, i: (b // H, jnp.maximum(i - 1, 0)))
     lse_blk = pl.BlockSpec((1, rep, w), lambda b, i: (b, 0, i))
     return pl.pallas_call(
         functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5), w=w),
-        grid=(BH, N // w),
+        grid=(BH, n_b),
         in_specs=[q_blk, self_blk, self_blk, prev_blk, prev_blk,
-                  bias_self, bias_prev],
+                  bias_self, bias_prev, seg_self, seg_prev],
         out_specs=(q_blk, lse_blk),
         out_shape=(jax.ShapeDtypeStruct((BH, rep, N, D), q.dtype),
                    jax.ShapeDtypeStruct((BH, rep, N), jnp.float32)),
         interpret=interpret,
-    )(q, k, v, k, v, key_bias, key_bias)
+    )(q, k, v, k, v, key_bias, key_bias, blk_seg, blk_seg)
 
 
-def _bwd_call(q, k, v, key_bias, do, lse, delta, *, window, n_heads, interpret):
+def _bwd_call(q, k, v, key_bias, blk_seg, do, lse, delta, *, window, n_heads,
+              interpret):
     BH, rep, N, D = q.shape
     w = window
     H = n_heads
@@ -169,6 +183,10 @@ def _bwd_call(q, k, v, key_bias, do, lse, delta, *, window, n_heads, interpret):
     prev_blk = pl.BlockSpec((1, w, D), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
     bias_self = pl.BlockSpec((1, w), lambda b, i: (b // H, i))
     bias_prev = pl.BlockSpec((1, w), lambda b, i: (b // H, jnp.maximum(i - 1, 0)))
+    seg_self = pl.BlockSpec((1, 1), lambda b, i: (b // H, i))
+    seg_prev = pl.BlockSpec((1, 1), lambda b, i: (b // H, jnp.maximum(i - 1, 0)))
+    seg_next = pl.BlockSpec((1, 1),
+                            lambda b, i: (b // H, jnp.minimum(i + 1, n_b - 1)))
     row_self = pl.BlockSpec((1, rep, w), lambda b, i: (b, 0, i))
     row_next = pl.BlockSpec((1, rep, w),
                             lambda b, i: (b, 0, jnp.minimum(i + 1, n_b - 1)))
@@ -179,6 +197,7 @@ def _bwd_call(q, k, v, key_bias, do, lse, delta, *, window, n_heads, interpret):
                   self_blk, prev_blk,            # k self / prev
                   self_blk, prev_blk,            # v self / prev
                   bias_self, bias_prev,          # key bias self / prev
+                  seg_self, seg_prev, seg_next,  # block segment ids
                   q_self, q_next,                # do self / next
                   row_self, row_next,            # lse self / next
                   row_self, row_next],           # delta self / next
@@ -187,7 +206,8 @@ def _bwd_call(q, k, v, key_bias, do, lse, delta, *, window, n_heads, interpret):
                    jax.ShapeDtypeStruct((BH, N, D), k.dtype),
                    jax.ShapeDtypeStruct((BH, N, D), v.dtype)),
         interpret=interpret,
-    )(q, q, k, k, v, v, key_bias, key_bias, do, do, lse, lse, delta, delta)
+    )(q, q, k, k, v, v, key_bias, key_bias, blk_seg, blk_seg, blk_seg,
+      do, do, lse, lse, delta, delta)
 
 
 @functools.lru_cache(maxsize=None)
@@ -195,18 +215,18 @@ def _make_vjp(window: int, n_heads: int, interpret: bool):
     kw = dict(window=window, n_heads=n_heads, interpret=interpret)
 
     @jax.custom_vjp
-    def attend(q, k, v, key_bias):
-        return _fwd_call(q, k, v, key_bias, **kw)[0]
+    def attend(q, k, v, key_bias, blk_seg):
+        return _fwd_call(q, k, v, key_bias, blk_seg, **kw)[0]
 
-    def attend_fwd(q, k, v, key_bias):
-        o, lse = _fwd_call(q, k, v, key_bias, **kw)
-        return o, (q, k, v, key_bias, o, lse)
+    def attend_fwd(q, k, v, key_bias, blk_seg):
+        o, lse = _fwd_call(q, k, v, key_bias, blk_seg, **kw)
+        return o, (q, k, v, key_bias, blk_seg, o, lse)
 
     def attend_bwd(res, do):
-        q, k, v, key_bias, o, lse = res
+        q, k, v, key_bias, blk_seg, o, lse = res
         delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
-        dq, dk, dv = _bwd_call(q, k, v, key_bias, do, lse, delta, **kw)
-        return dq, dk, dv, None                            # key bias: mask, no grad
+        dq, dk, dv = _bwd_call(q, k, v, key_bias, blk_seg, do, lse, delta, **kw)
+        return dq, dk, dv, None, None                      # bias/seg: no grad
 
     attend.defvjp(attend_fwd, attend_bwd)
     return attend
@@ -214,17 +234,25 @@ def _make_vjp(window: int, n_heads: int, interpret: bool):
 
 @functools.partial(jax.jit, static_argnames=("window", "n_heads", "interpret"))
 def local_window_kernel_call(q, k, v, key_bias, *, window: int, n_heads: int,
-                             interpret: bool | None = None):
+                             interpret: bool | None = None, blk_seg=None):
     """q: (B·Hkv, rep, N, D) grouped queries; k, v: (B·Hkv, N, D) — one K/V
     stream per KV head shared by its rep query heads; key_bias: (B, N) fp32
     additive (0 valid / NEG_INF padding); ``n_heads`` is the KV head count.
+    ``blk_seg``: optional (B, N/window) int32 per-block segment ids for
+    PACKED-VARLEN batches — a block never attends a prev block of a
+    different segment, and its keys get no gradient from a next block of a
+    different segment (None = one segment, the dense behaviour).
     Returns (B·Hkv, rep, N, D).
-    Differentiable in q, k, v (the bias is a mask — its cotangent is dropped)."""
+    Differentiable in q, k, v (bias and segment ids carry no gradient)."""
     if interpret is None:
         interpret = should_interpret()
+    if blk_seg is None:
+        blk_seg = jnp.zeros((key_bias.shape[0], q.shape[2] // window),
+                            jnp.int32)
     if interpret and q.shape[0] > 1:
         # CPU fallback: per-slice grids keep the interpreter linear in B·Hkv
         bias_bh = jnp.repeat(key_bias, n_heads, axis=0)
+        seg_bh = jnp.repeat(blk_seg, n_heads, axis=0)
         return interpret_batch_map(_make_vjp(window, 1, True),
-                                   q, k, v, bias_bh)
-    return _make_vjp(window, n_heads, interpret)(q, k, v, key_bias)
+                                   q, k, v, bias_bh, seg_bh)
+    return _make_vjp(window, n_heads, interpret)(q, k, v, key_bias, blk_seg)

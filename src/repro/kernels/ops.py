@@ -56,10 +56,14 @@ from repro.kernels.epilogue import gated_combine_kernel_call
 from repro.kernels.flash import flash_attention_kernel_call
 from repro.kernels.local import local_window_kernel_call
 from repro.kernels.selection import selection_attention_kernel_call
-from repro.numerics import NEG_INF, key_padding_bias
+from repro.kernels.varlen import flash_attention_varlen_kernel_call
+from repro.numerics import (NEG_INF, key_padding_bias,
+                            segment_ids_from_offsets)
 
 __all__ = ["ball_attention", "flash_attention", "local_window_attention",
-           "selection_attention", "gated_combine"]
+           "selection_attention", "gated_combine",
+           "ball_attention_varlen", "flash_attention_varlen",
+           "local_window_attention_varlen", "selection_attention_varlen"]
 
 
 def _to_bh(t):
@@ -234,6 +238,142 @@ def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
     return (out.reshape(B, Hkv, G, g, rep, D)
                .transpose(0, 2, 3, 1, 4, 5)
                .reshape(B, N, Hq, D))
+
+
+# ---------------------------------------------------------------------------
+# Packed-varlen wrappers (the offsets layout — see docs/varlen.md)
+#
+# Shared contract: NO batch dim.  All samples are concatenated on one packed
+# axis (``core.balltree.pack_varlen``): q (T, Hq, D), k/v (L, Hkv, D), with
+# ``offsets`` (S+1,) int32 marking per-sample boundaries — every entry a
+# multiple of the structural granule (ball size), trailing repeats = empty
+# segments.  ``mask`` / ``key_valid`` is the packed (T,)/(L,) bool validity.
+# Sample isolation comes from in-kernel segment-id masking plus tile
+# skipping (``kernels/varlen.py``), or from the structural guarantee that
+# balls / blocks never straddle an offsets boundary.
+# ---------------------------------------------------------------------------
+
+def _tile_seg_ranges(seg, tile):
+    """(Tp,) monotone segment ids → (2, Tp/tile) per-tile [min, max] int32."""
+    blocks = seg.reshape(-1, tile)
+    return jnp.stack([blocks[:, 0], blocks[:, -1]]).astype(jnp.int32)
+
+
+def flash_attention_varlen(q, k, v, q_offsets, k_offsets, *, key_valid=None,
+                           tq: int | None = None, tk: int | None = None,
+                           interpret: bool | None = None):
+    """Packed-varlen streaming-softmax attention (the cu_seqlens idiom).
+
+    q: (T, Hq, D) packed queries; k, v: (L, Hkv, D) packed keys/values with
+    Hq = Hkv·rep (GQA-native).  ``q_offsets`` (S+1,) / ``k_offsets`` (S+1,)
+    int32 mark the per-sample boundaries of the two axes — segment i of the
+    queries attends ONLY segment i of the keys (the compression branch
+    passes ``k_offsets = q_offsets // ell`` for its pooled key axis).
+    ``key_valid``: (L,) bool, True = real key.  Derives per-position segment
+    ids and per-tile segment ranges, pads both axes to tile multiples
+    (padded keys: NEG_INF bias; padded/capacity query rows attend nothing
+    real and are sliced/zeroed), and launches the tile-skipping varlen
+    kernel — cross-sample tiles are skipped entirely, so work scales with
+    Σ nᵢ² per sample instead of T².  Tiles resolve through
+    ``kernels/tuning.py`` under the ``varlen`` layout key (never shared with
+    padded-bucket entries).  Returns (T, Hq, D).  Differentiable in q, k, v.
+    """
+    T, Hq, D = q.shape
+    L, Hkv, _ = k.shape
+    if interpret is None:
+        from repro.kernels.common import should_interpret
+        interpret = should_interpret()
+    if tq is None or tk is None:
+        atq, atk = tuning.get_tiles(
+            "flash", n_q=T, n_k=L, d=D, dtype=q.dtype, interpret=interpret,
+            variant="plain", layout="varlen")
+        tq = tq or atq
+        tk = tk or atk
+    tq, tk = min(tq, tuning.round_up(T, 8)), min(tk, tuning.round_up(L, 8))
+
+    kb = key_padding_bias(key_valid[None] if key_valid is not None else None,
+                          1, L)
+    Tp, Lp = tuning.round_up(T, tq), tuning.round_up(L, tk)
+    if Lp != L:
+        k = jnp.pad(k, ((0, Lp - L), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, Lp - L), (0, 0), (0, 0)))
+        kb = jnp.pad(kb, ((0, 0), (0, Lp - L)), constant_values=NEG_INF)
+    if Tp != T:
+        q = jnp.pad(q, ((0, Tp - T), (0, 0), (0, 0)))
+
+    # positions at/after offsets[-1] (capacity + tile padding) get segment id
+    # S, which matches no real sample — padded queries and keys are mutually
+    # invisible to real ones by the in-kernel equality test
+    qseg = segment_ids_from_offsets(q_offsets, Tp)
+    kseg = segment_ids_from_offsets(k_offsets, Lp)
+
+    out = flash_attention_varlen_kernel_call(
+        _to_grouped(q[None], Hkv), _to_bh(k[None]), _to_bh(v[None]), kb,
+        qseg[None], kseg[None],
+        _tile_seg_ranges(qseg, tq), _tile_seg_ranges(kseg, tk),
+        tq=tq, tk=tk, interpret=interpret)
+    out = _from_grouped(out, 1, Hkv)[0]
+    return out[:T] if Tp != T else out
+
+
+def ball_attention_varlen(q, k, v, offsets, mask, ball_size: int, *,
+                          interpret: bool | None = None):
+    """Packed-varlen Ball-Tree Attention.
+
+    q: (T, Hq, D); k, v: (T, Hkv, D); ``offsets`` (S+1,) int32 per the
+    packed contract; ``mask``: (T,) bool or None.  Because every offsets
+    entry is a multiple of ``ball_size`` (``pack_varlen`` guarantees it), no
+    ball straddles a sample boundary — the block-diagonal BTA kernel on the
+    packed axis is already sample-isolating, so this dispatches to the
+    batched kernel at B=1 with zero per-sample padding slots.  Capacity-tail
+    balls are fully masked and return zeros.  Returns (T, Hq, D).
+    Differentiable in q, k, v."""
+    return ball_attention(q[None], k[None], v[None],
+                          mask[None] if mask is not None else None,
+                          ball_size, interpret=interpret)[0]
+
+
+def local_window_attention_varlen(q, k, v, offsets, window: int, mask=None, *,
+                                  interpret: bool | None = None):
+    """Packed-varlen blocked local causal attention.
+
+    q: (T, Hq, D); k, v: (T, Hkv, D); ``offsets`` (S+1,) int32 — every entry
+    must be a multiple of ``window`` so blocks never straddle a boundary
+    (``pack_varlen`` with a ball-size multiple of the window guarantees it).
+    Per-BLOCK segment ids derived from ``offsets`` ride into the kernel: the
+    first block of each sample sees no prev block, and a sample's last block
+    leaks no gradient to the next sample (``kernels/local.py``).  ``mask``:
+    (T,) bool or None.  Returns (T, Hq, D).  Differentiable in q, k, v."""
+    T, Hq, D = q.shape
+    Hkv = k.shape[1]
+    seg = segment_ids_from_offsets(offsets, T)
+    blk_seg = seg.reshape(T // window, window)[:, 0][None]     # (1, n_b)
+    out = local_window_kernel_call(
+        _to_grouped(q[None], Hkv), _to_bh(k[None]), _to_bh(v[None]),
+        key_padding_bias(mask[None] if mask is not None else None, 1, T),
+        window=window, n_heads=Hkv, interpret=interpret, blk_seg=blk_seg)
+    return _from_grouped(out, 1, Hkv)[0]
+
+
+def selection_attention_varlen(q, k, v, top_idx, sel_valid, offsets, mask, *,
+                               block_size: int, group_size: int,
+                               interpret: bool | None = None):
+    """Packed-varlen group-selected sparse attention.
+
+    q: (T, Hq, D); k, v: (T, Hkv, D); ``top_idx``/``sel_valid``:
+    (G, Hkv, k*) — selected coarse-block ids are GLOBAL packed-axis block
+    indices.  Sample isolation is enforced UPSTREAM: the selection scores
+    mask cross-sample (group, block) pairs to NEG_INF
+    (``core.bsa._selection_scores`` with segment ids), so a selected block
+    always belongs to the query group's own sample and the gather kernel
+    needs no extra masking — ``offsets`` is part of the signature for
+    contract uniformity (and future in-kernel verification).  ``mask``:
+    (T,) bool or None masks tokens inside gathered blocks.  Returns
+    (T, Hq, D).  Differentiable in q, k, v."""
+    return selection_attention(
+        q[None], k[None], v[None], top_idx[None], sel_valid[None],
+        mask[None] if mask is not None else None,
+        block_size=block_size, group_size=group_size, interpret=interpret)[0]
 
 
 def gated_combine(outs, gates, mask, *, interpret: bool | None = None):

@@ -139,11 +139,12 @@ def heuristic_tile(n: int, pref: int) -> int:
 # ---------------------------------------------------------------------------
 
 def _key(kernel: str, *, n_q: int, n_k: int, d: int, dtype, interpret: bool,
-         variant: str = "") -> str:
+         variant: str = "", layout: str = "") -> str:
     mode = "interpret" if interpret else "compiled"
     v = f"/{variant}" if variant else ""
+    lay = f"/{layout}" if layout else ""
     return (f"{kernel}/q{shape_bucket(n_q)}_k{shape_bucket(n_k)}_d{d}"
-            f"/{str(dtype)}/{mode}{v}")
+            f"/{str(dtype)}/{mode}{v}{lay}")
 
 
 def flash_variant(causal: bool, block_causal: bool, ell: int) -> str:
@@ -168,18 +169,23 @@ def flash_candidates(n_q: int, n_k: int) -> list[tuple[int, int]]:
 
 def get_tiles(kernel: str, *, n_q: int, n_k: int, d: int, dtype,
               interpret: bool, measure=None, variant: str = "",
+              layout: str = "",
               prefs: tuple[int, int] = (256, 256)) -> tuple[int, int]:
     """Resolve (tq, tk) for one kernel launch.
 
     ``variant`` distinguishes configurations of one kernel whose in-kernel
     work differs (flash mask modes) so they never share a cache entry.
+    ``layout`` distinguishes the batch layout — "" for padded-bucket
+    (B, L) batches vs ``"varlen"`` for the packed-offsets layout, whose
+    per-tile segment masking / tile skipping changes the cost profile, so a
+    tile measured on one layout must never be replayed on the other.
     ``measure(tq, tk) -> seconds`` is invoked per candidate ONLY on a cache
     miss with autotuning enabled; the winner is persisted.  Without a measure
     callback (or with autotune off / measure failure) the deterministic
     heuristic is returned and nothing is written.
     """
     key = _key(kernel, n_q=n_q, n_k=n_k, d=d, dtype=dtype, interpret=interpret,
-               variant=variant)
+               variant=variant, layout=layout)
     cache = _load()
     hit = cache.get(key)
     if hit:

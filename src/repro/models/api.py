@@ -174,7 +174,8 @@ def _pc_api(mcfg) -> ModelAPI:
         init=lambda key: _pc.pc_init(key, mcfg),
         loss=lambda p, b: _pc.pc_loss(p, b, mcfg=mcfg),
         forward=lambda p, b: _pc.pc_apply(p, b["feats"], mcfg=mcfg,
-                                          mask=b.get("mask")),
+                                          mask=b.get("mask"),
+                                          offsets=b.get("offsets")),
         make_batch=make_batch,
         batch_specs=batch_specs,
     )

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import (
     bsa_attention,
+    bsa_attention_varlen,
     bsa_init,
     erwin_attention,
     full_attention,
@@ -60,11 +61,29 @@ def _project(p, x, mcfg, positions=None, rope: bool = True):
 
 def attention_layer_apply(p, x, *, mcfg, causal: bool, mask=None,
                           positions=None, rope: bool = True,
-                          erwin_level: int = 0):
-    """Full-sequence forward.  x: (B, N, d_model) → (B, N, d_model)."""
+                          erwin_level: int = 0, offsets=None):
+    """Full-sequence forward.  x: (B, N, d_model) → (B, N, d_model).
+
+    ``offsets`` (S+1,) int32 switches the non-causal BSA path to the
+    PACKED-VARLEN layout (docs/varlen.md): x must then be a single packed
+    row (B == 1) whose samples are concatenated back-to-back at ball-size
+    boundaries, and ``mask``'s row marks real tokens.  Other mechanisms
+    don't support it (yet) and raise.
+    """
     B, N, _ = x.shape
     q, k, v = _project(p, x, mcfg, positions, rope)
-    if mcfg.attention == "bsa":
+    if offsets is not None:
+        if mcfg.attention != "bsa" or causal:
+            raise NotImplementedError(
+                "packed-varlen offsets are only supported by non-causal BSA "
+                f"(got attention={mcfg.attention!r}, causal={causal})")
+        if B != 1:
+            raise ValueError(
+                f"packed-varlen input must be a single packed row, got B={B}")
+        out = bsa_attention_varlen(
+            p["bsa"], q[0], k[0], v[0], cfg=mcfg.bsa, offsets=offsets,
+            mask=None if mask is None else mask[0], x=x[0])[None]
+    elif mcfg.attention == "bsa":
         if causal:
             out = nsa_causal_attention(p["bsa"], q, k, v, cfg=mcfg.bsa,
                                        mask=mask, x=x)

@@ -42,8 +42,13 @@ def _layer_init(key, mcfg, pd):
     }
 
 
-def pc_apply(params, feats, *, mcfg, mask=None, erwin_level_of=None):
-    """feats: (B, N, in_dim) ball-ordered; mask: (B, N).  → (B, N, out_dim)."""
+def pc_apply(params, feats, *, mcfg, mask=None, erwin_level_of=None,
+             offsets=None):
+    """feats: (B, N, in_dim) ball-ordered; mask: (B, N).  → (B, N, out_dim).
+
+    ``offsets`` (S+1,) int32 selects the packed-varlen layout (docs/varlen.md):
+    feats is then ONE packed row (B=1) of concatenated samples and every
+    attention layer runs segment-isolated with no dummy batch slots."""
     cdt = mcfg.cdtype()
     x = dense(params["embed"], feats.astype(cdt))
     x = constrain(x, "batch", "seq_res", "d_model")
@@ -52,7 +57,7 @@ def pc_apply(params, feats, *, mcfg, mask=None, erwin_level_of=None):
         h = rmsnorm(lp["norm1"], x, mcfg.norm_eps)
         h = attention_layer_apply(lp["attn"], h, mcfg=mcfg, causal=False,
                                   mask=mask, positions=None, rope=False,
-                                  erwin_level=level)
+                                  erwin_level=level, offsets=offsets)
         x = x + h
         h = rmsnorm(lp["norm2"], x, mcfg.norm_eps)
         x = x + swiglu(lp["ffn"], h)
@@ -81,8 +86,10 @@ def pc_apply(params, feats, *, mcfg, mask=None, erwin_level_of=None):
 
 
 def pc_loss(params, batch, *, mcfg):
-    """batch: {feats (B,N,F), target (B,N,out_dim), mask (B,N)} → MSE."""
-    pred = pc_apply(params, batch["feats"], mcfg=mcfg, mask=batch.get("mask"))
+    """batch: {feats (B,N,F), target (B,N,out_dim), mask (B,N)} → MSE.
+    An optional ``offsets`` key selects the packed-varlen layout."""
+    pred = pc_apply(params, batch["feats"], mcfg=mcfg, mask=batch.get("mask"),
+                    offsets=batch.get("offsets"))
     err = (pred - batch["target"].astype(jnp.float32)) ** 2
     m = batch.get("mask")
     if m is not None:

@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["NEG_INF", "mask_to_bias", "key_padding_bias"]
+__all__ = ["NEG_INF", "mask_to_bias", "key_padding_bias",
+           "segment_ids_from_offsets"]
 
 NEG_INF = -1e30
 
@@ -34,3 +35,18 @@ def key_padding_bias(mask: jnp.ndarray | None, batch: int, length: int) -> jnp.n
     if mask is None:
         return jnp.zeros((batch, length), jnp.float32)
     return mask_to_bias(mask)
+
+
+def segment_ids_from_offsets(offsets: jnp.ndarray, length: int) -> jnp.ndarray:
+    """Packed-varlen offsets ``(S+1,)`` → per-position segment id ``(length,)``.
+
+    Positions in ``[offsets[i], offsets[i+1])`` get id ``i``.  Positions at or
+    beyond ``offsets[-1]`` (capacity padding) get id ``S`` — STRICTLY greater
+    than every real segment, so an equality test against key segment ids makes
+    capacity-tail rows attend nothing real and vice versa.  Trailing repeated
+    offsets (empty segments, used to keep the offsets shape static under jit)
+    own no positions and therefore never match anything.
+    """
+    pos = jnp.arange(length, dtype=jnp.int32)
+    bounds = jnp.asarray(offsets, jnp.int32)[1:]
+    return jnp.searchsorted(bounds, pos, side="right").astype(jnp.int32)

@@ -28,8 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.backend import use_backend
-from repro.core.balltree import (bucket_length, pack_ragged,
-                                 build_balltree_permutations, unpack_ragged)
+from repro.core.balltree import (bucket_length, pack_ragged, pack_varlen,
+                                 build_balltree_permutations, unpack_ragged,
+                                 unpack_varlen)
 from repro.launch.steps import make_serve_step
 
 
@@ -108,20 +109,40 @@ class GeometryEngine:
     unpack + inverse-permute.  Clouds are served in request order, grouped
     into batches of ``batch_slots``.
 
-    ``pad_to`` freezes the packed length (single compiled shape — use the
-    dataset's ``max_padded_len`` when the size range is known); otherwise
-    each batch pads to the geometric bucket of its largest cloud, giving at
-    most O(log size-range) compilations.  A short final batch is padded with
+    Two batch LAYOUTS (docs/varlen.md):
+
+    * ``"packed"`` (default when the model runs BSA) — clouds concatenated
+      on ONE packed axis with an ``offsets`` boundary array
+      (``core.balltree.pack_varlen``); no dummy batch slots, no
+      per-slot padding to the largest cloud, so the forward spends FLOPs
+      proportional to Σnᵢ rather than B·max(nᵢ).
+    * ``"padded"`` — the classic (B, L, ·) bucket-padded batch with
+      per-sample masks; required for non-BSA attention mechanisms, whose
+      layers don't take offsets.
+
+    ``pad_to`` freezes the compiled length (use the dataset's
+    ``max_padded_len`` when the size range is known): the per-slot padded
+    length in ``"padded"`` layout, the TOTAL packed capacity in
+    ``"packed"``.  Otherwise each batch pads to a geometric bucket (of the
+    largest cloud, resp. of the packed total), giving at most
+    O(log size-range) compilations.  A short final batch costs nothing
+    extra when packed (offsets simply repeat); padded layout fills it with
     fully-masked dummy slots rather than recompiling at a smaller B.
     """
 
     def __init__(self, api, params, *, batch_slots: int = 8,
-                 pad_to: int | None = None, backend: str | None = None):
+                 pad_to: int | None = None, backend: str | None = None,
+                 layout: str | None = None):
         self.api = api
         self.params = params
         self.batch_slots = batch_slots
         self.pad_to = pad_to
         self.backend = backend          # attention-backend override (by name)
+        if layout is None:
+            layout = "packed" if api.mcfg.attention == "bsa" else "padded"
+        if layout not in ("packed", "padded"):
+            raise ValueError(f"layout must be 'packed' or 'padded', got {layout!r}")
+        self.layout = layout
         self.ball_size = api.mcfg.bsa.ball_size
         self._fwd = jax.jit(api.forward)
         self.clouds_served = 0
@@ -148,6 +169,23 @@ class GeometryEngine:
         fts_list = [np.asarray(f, np.float32) for _, f in chunk]
         perms = build_balltree_permutations(pts_list, self.ball_size)
         ordered = [f[perm] for f, perm in zip(fts_list, perms)]
+        if self.layout == "packed":
+            feats, offsets, mask = pack_varlen(
+                ordered, self.ball_size, pad_to=self.pad_to,
+                max_samples=self.batch_slots)
+            with _backend_scope(self.backend):
+                pred = self._fwd(self.params,
+                                 {"feats": jnp.asarray(feats)[None],
+                                  "mask": jnp.asarray(mask)[None],
+                                  "offsets": jnp.asarray(offsets)})
+            per_cloud = unpack_varlen(np.asarray(pred)[0],
+                                      offsets[:len(chunk) + 1], mask)
+            out = []
+            for rows, perm in zip(per_cloud, perms):
+                unperm = np.empty_like(rows)
+                unperm[perm] = rows                # ball order → original order
+                out.append(unperm)
+            return out
         target = self.pad_to or bucket_length(
             max(f.shape[0] for f in ordered), self.ball_size)
         # fully-masked dummy slots keep B static for the final short batch
