@@ -185,7 +185,8 @@ def time_kernel_train_step(args) -> None:
     backend = args.backend or "pallas"
     cfg = BSAConfig(ball_size=ball, local_window=ball,
                     cmp_block=args.ell or 8, slc_block=args.ell or 8,
-                    top_k=args.topk or 4, group_size=8, backend=backend)
+                    top_k=args.topk or 4, group_size=8, backend=backend,
+                    score_dtype=args.score_dtype)
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     q = jax.random.normal(ks[0], (B, N, Hq, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, N, Hkv, D), jnp.float32)
@@ -209,6 +210,30 @@ def time_kernel_train_step(args) -> None:
 
     step = jax.jit(jax.value_and_grad(loss))
 
+    def occupancy_report(fn, label):
+        """One EAGER forward under the occupancy recorder (kernels/occupancy
+        .py); recording is a no-op under jit tracing, so this is the only
+        place live/total tile counts are concrete.  Returns {kernel:
+        {live, total}} for the JSON record (None on non-kernel backends)."""
+        from repro.kernels import occupancy as occ_mod
+        with occ_mod.record_occupancy() as counts:
+            jax.block_until_ready(fn())
+        if not counts:
+            print(f"# occupancy[{label}]: no kernel launches recorded "
+                  f"(backend={backend})", flush=True)
+            return None
+        for kname, c in sorted(counts.items()):
+            pct = 100.0 * c["live"] / max(c["total"], 1)
+            print(f"# occupancy[{label}/{kname}]: {c['live']}/{c['total']} "
+                  f"tiles live ({pct:.0f}%)", flush=True)
+        return {kname: dict(c) for kname, c in counts.items()}
+
+    occ = None
+    if args.occupancy:
+        occ = occupancy_report(
+            lambda: bsa_attention(params, q, k, v, cfg=cfg, mask=mask),
+            "padded" if args.ragged else "dense")
+
     def run(p, q, k, v, m):
         out, grads = step(p, q, k, v, m)
         return out
@@ -229,7 +254,7 @@ def time_kernel_train_step(args) -> None:
     tag = "_ragged" if args.ragged else ""      # distinct trajectory entries
     emit(f"perf_iter/kernel_train_step_b{B}_n{N}{tag}", us,
          f"mode={mode};heads={Hq}/{Hkv};d={D};points_per_sec={pps:.0f};"
-         f"peak_bytes={peak_bytes}")
+         f"peak_bytes={peak_bytes};score_dtype={args.score_dtype}")
 
     packed_stats = None
     if args.ragged:
@@ -254,6 +279,12 @@ def time_kernel_train_step(args) -> None:
                                                 offsets=offs, mask=m) ** 2)
 
         step_pk = jax.jit(jax.value_and_grad(loss_pk))
+        occ_pk = None
+        if args.occupancy:
+            occ_pk = occupancy_report(
+                lambda: bsa_attention_varlen(params, qp, kp, vp, cfg=cfg,
+                                             offsets=offs, mask=maskp),
+                "packed")
 
         def run_pk(p, q, k, v, m):
             out, grads = step_pk(p, q, k, v, m)
@@ -278,14 +309,19 @@ def time_kernel_train_step(args) -> None:
                         "points_per_sec": round(pps_pk, 1),
                         "peak_bytes": peak_pk,
                         "packed_rows": total, "padded_rows": B * N}
+        if occ_pk is not None:
+            packed_stats["occupancy"] = occ_pk
 
     record = {
         "shape": {"batch": B, "n": N, "heads": Hq, "kv_heads": Hkv,
                   "head_dim": D, "ragged": bool(args.ragged)},
         "mode": mode, "backend": resolved, "autotune": bool(args.autotune),
+        "score_dtype": args.score_dtype,
         "us_per_step": round(us, 1), "points_per_sec": round(pps, 1),
         "peak_bytes": peak_bytes,
     }
+    if occ is not None:
+        record["occupancy"] = occ
     if packed_stats is not None:
         # headline = packed (what the gate tracks); padded rides along
         record["padded"] = {"us_per_step": round(us, 1),
@@ -331,8 +367,10 @@ def time_kernel_train_step(args) -> None:
 def _check_regression(record: dict, baseline_path: str, max_regression: float):
     """CI gate: fail when throughput regressed > max_regression vs the
     committed baseline record.  Ragged records compare against the
-    baseline's ``ragged_varlen.packed`` entry; dense ones against its
-    ``after`` entry (or a flat record)."""
+    baseline's ``ragged_varlen.packed`` entry, bf16 ones against
+    ``mixed_precision.after`` (fp32 and bf16 wall times are not comparable
+    on CPU, which emulates bf16); dense fp32 records read the ``after``
+    entry (or a flat record)."""
     p = Path(baseline_path)
     if not p.exists():
         print(f"# baseline {baseline_path} missing — regression gate skipped",
@@ -341,6 +379,9 @@ def _check_regression(record: dict, baseline_path: str, max_regression: float):
     base = json.loads(p.read_text())
     if record["shape"].get("ragged") and "ragged_varlen" in base:
         base = base["ragged_varlen"].get("packed", {})
+    elif (record.get("score_dtype") == "bfloat16"
+          and "mixed_precision" in base):
+        base = base["mixed_precision"].get("after", {})
     else:
         base = base.get("after", base)           # before/after trajectory file
     base_pps = base.get("points_per_sec")
@@ -381,6 +422,16 @@ def main():
     ap.add_argument("--ragged", action="store_true",
                     help="kernel-step: high-variance mixed-size batch, timed "
                          "both bucket-padded and packed-varlen (offsets)")
+    ap.add_argument("--occupancy", action="store_true",
+                    help="kernel-step: run one eager forward under the tile-"
+                         "occupancy recorder and report live/total tile "
+                         "counts per kernel (kernels/occupancy.py); counts "
+                         "are included in the --bench-json record")
+    ap.add_argument("--score-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="kernel-step: BSAConfig.score_dtype — bfloat16 runs "
+                         "the kernel precision contract (bf16 QK^T/PV "
+                         "operands, fp32 accumulation)")
     ap.add_argument("--autotune", action="store_true",
                     help="enable the tile autotuner (kernels/tuning.py): "
                          "measure candidate (tq, tk) grids on cache miss and "

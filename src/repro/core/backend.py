@@ -111,6 +111,7 @@ __all__ = [
     "resolve_branch_backends",
     "get_combine",
     "get_varlen",
+    "accepts_kwarg",
 ]
 
 ENV_VAR = "REPRO_ATTENTION_BACKEND"
@@ -150,6 +151,12 @@ class Backend(Protocol):
               block_causal: bool = False, ell: int = 1,
               chunk_tokens: int = 0) -> jnp.ndarray: ...
 
+    # Backends MAY additionally accept ``q_valid=None`` on ``flash`` — an
+    # OPTIMIZATION-ONLY query-validity hint (rows of all-padding query tiles
+    # may come back unspecified/zero; callers mask them downstream).  Callers
+    # probe for it with :func:`accepts_kwarg`, so plug-ins without the kwarg
+    # keep working unchanged.
+
     def local_window(self, q, k, v, *, window: int, mask=None,
                      chunk_tokens: int = 0) -> jnp.ndarray: ...
 
@@ -188,7 +195,9 @@ class JnpBackend:
         return ball_attention_ref(q, k, v, mask, ball_size, chunk_balls=cb)
 
     def flash(self, q, k, v, *, key_valid=None, causal=False,
-              block_causal=False, ell=1, chunk_tokens=0):
+              block_causal=False, ell=1, chunk_tokens=0, q_valid=None):
+        # q_valid is an optimization hint only — the reference computes every
+        # row (its outputs on padded rows ARE the specified values)
         from repro.core.branches import chunked_q_attention, sdpa
         k, v = self._rep(q, k, v)
         if not causal:
@@ -299,13 +308,13 @@ class PallasBackend:
                                    interpret=self.interpret)
 
     def flash(self, q, k, v, *, key_valid=None, causal=False,
-              block_causal=False, ell=1, chunk_tokens=0):
+              block_causal=False, ell=1, chunk_tokens=0, q_valid=None):
         from repro.kernels import ops as kops
         assert not causal or k.shape[1] == q.shape[1], \
             "kernel path assumes aligned q/k for token-level causal"
         return kops.flash_attention(q, k, v, key_valid=key_valid, causal=causal,
                                     block_causal=block_causal, ell=ell,
-                                    interpret=self.interpret)
+                                    q_valid=q_valid, interpret=self.interpret)
 
     def local_window(self, q, k, v, *, window, mask=None, chunk_tokens=0):
         from repro.kernels import ops as kops
@@ -485,6 +494,23 @@ def get_combine(backend: Backend):
         return fn
     from repro.core.branches import gated_combine_ref
     return gated_combine_ref
+
+
+def accepts_kwarg(fn, name: str) -> bool:
+    """Does ``fn`` accept keyword argument ``name``?
+
+    The probe callers use before passing OPTIONAL protocol extensions (the
+    ``q_valid`` hint on ``flash``) so third-party backends registered against
+    the narrower signature keep working."""
+    import inspect
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return False
+    p = sig.parameters.get(name)
+    if p is not None:
+        return p.kind in (p.KEYWORD_ONLY, p.POSITIONAL_OR_KEYWORD)
+    return any(pp.kind == pp.VAR_KEYWORD for pp in sig.parameters.values())
 
 
 def get_varlen(backend: Backend, op: str):

@@ -124,6 +124,19 @@ def repeat_kv(kv: jnp.ndarray, rep: int) -> jnp.ndarray:
         B, N, Hkv * rep, D)
 
 
+def score_dtype_cast(cfg, *tensors):
+    """Entry of the kernel-level precision contract: under
+    ``score_dtype="bfloat16"`` the attention inputs are cast to bf16 once at
+    the top of ``bsa_attention`` / ``nsa_causal_attention``, so every kernel
+    resolves a bf16 matmul-operand compute dtype — Q/K/V tiles stay bf16
+    through QK^T and PV while accumulation and softmax statistics stay fp32
+    (``kernels/common.resolve_compute_dtype``).  fp32 mode returns the
+    tensors untouched; the caller casts the combined output back."""
+    if cfg.score_dtype == "bfloat16":
+        return tuple(t.astype(jnp.bfloat16) for t in tensors)
+    return tensors
+
+
 def diag_scores(q, k_cmp, rep: int, score_dtype=jnp.float32):
     """Selection importance scores q·k_cmpᵀ, GQA-group-summed.
 
@@ -225,7 +238,13 @@ def selection_attend(q, k, v, top_idx, sel_valid, mask, *, block_size: int,
 
     q: (B,N,Hq,D); k/v: (B,N,Hkv,D); top_idx/sel_valid: (B,G,Hkv,k*);
     ``block_size`` is the KV block length ℓ, ``chunk_tokens`` the optional
-    query-memory bound.  Returns (B,N,Hq,D)."""
+    query-memory bound.  Returns (B,N,Hq,D).
+
+    Groups whose query tokens are ALL padded get their selections
+    invalidated (→ exact zeros), matching the kernel path's dead-group
+    skipping — so oracle and kernel agree bit-for-bit on padded rows."""
+    from repro.kernels.occupancy import invalidate_dead_groups
+    sel_valid = invalidate_dead_groups(sel_valid, mask, q.shape[1])
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
     rep = Hq // Hkv

@@ -21,7 +21,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.backend import get_combine, get_varlen, resolve_branch_backends
+from repro.core.backend import (
+    accepts_kwarg,
+    get_combine,
+    get_varlen,
+    resolve_branch_backends,
+)
 from repro.core.branches import (
     NEG_INF,
     block_validity,
@@ -31,6 +36,7 @@ from repro.core.branches import (
     mask_to_bias,
     phi_apply,
     phi_init,
+    score_dtype_cast,
     sdpa,
 )
 from repro.core.config import BSAConfig
@@ -113,20 +119,28 @@ def _compression_branch(params, q, k, v, mask, cfg: BSAConfig, backend):
     blk_valid = block_validity(mask, B, N, cfg.cmp_block)          # (B,NB)
     # GQA-native: the coarse K/V stay at Hkv heads — no repeat_kv blowup
 
+    # q_valid is an OPTIMIZATION HINT: rows it marks invalid are masked by
+    # the combine epilogue anyway, so kernels may skip whole dead query
+    # tiles.  Probed by signature so third-party backends keep working.
+    hint = mask is not None and accepts_kwarg(backend.flash, "q_valid")
+
     if cfg.group_compression:
         # Eq. 15: pool queries too; attend at block level; un-pool ℓ× via a
         # broadcast VIEW (jnp.repeat would materialise the ℓ-fold copy)
         nb = N // cfg.cmp_block
         q_cmp = phi_apply(params["phi_q"], q, mask, cfg)           # (B,NB,Hq,D)
+        kw = {"q_valid": blk_valid} if hint else {}
         out_c = backend.flash(q_cmp, k_cmp, v_cmp, key_valid=blk_valid,
-                              chunk_tokens=cfg.jnp_chunk_tokens)   # (B,NB,Hq,D)
+                              chunk_tokens=cfg.jnp_chunk_tokens,
+                              **kw)                                # (B,NB,Hq,D)
         out = jnp.broadcast_to(out_c[:, :, None],
                                (B, nb, cfg.cmp_block, Hq, D)
                                ).reshape(B, N, Hq, D)
         return out, k_cmp, v_cmp, blk_valid
 
+    kw = {"q_valid": mask} if hint else {}
     out = backend.flash(q, k_cmp, v_cmp, key_valid=blk_valid,
-                        chunk_tokens=cfg.jnp_chunk_tokens)
+                        chunk_tokens=cfg.jnp_chunk_tokens, **kw)
     return out, k_cmp, v_cmp, blk_valid
 
 
@@ -233,6 +247,12 @@ def bsa_attention(params: dict, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     assert k.shape[:2] == (B, N) and v.shape == k.shape
     assert Hq % k.shape[2] == 0, "q heads must be a multiple of kv heads"
 
+    # precision contract: under score_dtype="bfloat16" the branch inputs go
+    # in bf16 (kernels keep QK^T/PV operands bf16, accumulate fp32) and the
+    # combined output is cast back to the caller's dtype at the end.
+    in_dtype = q.dtype
+    q, k, v = score_dtype_cast(cfg, q, k, v)
+
     bk = resolve_branch_backends(cfg)
     out_ball = _ball_branch(q, k, v, mask, cfg, bk["ball"])
     out_cmp, k_cmp, v_cmp, blk_valid = _compression_branch(
@@ -245,7 +265,7 @@ def bsa_attention(params: dict, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     # backends run kernels/epilogue.py; others fall back to the jnp ref)
     out = get_combine(bk["ball"])(
         (out_ball, out_cmp, out_slc),
-        (gates["ball"], gates["cmp"], gates["slc"]), mask)
+        (gates["ball"], gates["cmp"], gates["slc"]), mask).astype(in_dtype)
     if return_aux:
         return out, {"ball": out_ball, "cmp": out_cmp, "slc": out_slc,
                      "indices": top_idx, "gates": gates}
@@ -280,6 +300,9 @@ def bsa_attention_varlen(params: dict, q: jnp.ndarray, k: jnp.ndarray,
     T, Hq, D = q.shape
     assert k.shape[0] == T and v.shape == k.shape
     assert Hq % k.shape[1] == 0, "q heads must be a multiple of kv heads"
+    # precision contract — see bsa_attention
+    in_dtype = q.dtype
+    q, k, v = score_dtype_cast(cfg, q, k, v)
     ell = cfg.cmp_block
     nb = T // ell
     ct = cfg.jnp_chunk_tokens
@@ -325,7 +348,7 @@ def bsa_attention_varlen(params: dict, q: jnp.ndarray, k: jnp.ndarray,
                         None if x is None else x[None], Hq)
     out = get_combine(bk["ball"])(
         (out_ball[None], out_cmp[None], out_slc[None]),
-        (gates["ball"], gates["cmp"], gates["slc"]), maskb)[0]
+        (gates["ball"], gates["cmp"], gates["slc"]), maskb)[0].astype(in_dtype)
     if return_aux:
         return out, {"ball": out_ball, "cmp": out_cmp, "slc": out_slc,
                      "indices": top_idx[0], "gates": gates}

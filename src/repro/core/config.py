@@ -74,10 +74,25 @@ class BSAConfig:
                 DeprecationWarning, stacklevel=3)
             object.__setattr__(self, "backend", mapped)
             object.__setattr__(self, "use_kernels", None)
-        if self.score_dtype not in ("float32", "bfloat16"):
+        # Normalise dtype-like spellings (jnp.bfloat16, np.dtype("float32"),
+        # "bf16"…) to the canonical name before validating, so
+        # replace(cfg, score_dtype=jnp.bfloat16) works.
+        sd = self.score_dtype
+        if not isinstance(sd, str) or sd not in ("float32", "bfloat16"):
+            try:
+                import numpy as _np
+                sd = _np.dtype(sd).name
+            except TypeError as e:
+                raise ValueError(
+                    f"score_dtype {self.score_dtype!r} is not a dtype: pass "
+                    '"float32", "bfloat16", or an equivalent dtype object '
+                    "(e.g. jnp.bfloat16, np.float32)") from e
+            object.__setattr__(self, "score_dtype", sd)
+        if sd not in ("float32", "bfloat16"):
             raise ValueError(f"score_dtype {self.score_dtype!r} must be "
-                             '"float32" or "bfloat16" (the tested, '
-                             "TPU-native scoring dtypes)")
+                             '"float32" or "bfloat16" — as the string, or as '
+                             "an equivalent dtype object (e.g. jnp.bfloat16) "
+                             "(the tested, TPU-native scoring dtypes)")
         if self.ball_size & (self.ball_size - 1):
             raise ValueError("ball_size must be a power of two")
         if self.slc_block != self.cmp_block:

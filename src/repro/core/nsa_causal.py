@@ -29,7 +29,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.backend import get_combine, resolve_branch_backends
+from repro.core.backend import accepts_kwarg, get_combine, resolve_branch_backends
 from repro.core.branches import (
     NEG_INF,
     block_validity,
@@ -40,6 +40,7 @@ from repro.core.branches import (
     phi_apply,
     phi_init,
     repeat_kv,
+    score_dtype_cast,
     sdpa,
 )
 from repro.core.config import BSAConfig
@@ -149,6 +150,12 @@ def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
     rep = Hq // Hkv
     ell = cfg.cmp_block
 
+    # precision contract: under score_dtype="bfloat16" the branch inputs go
+    # in bf16 (kernels keep QK^T/PV operands bf16, accumulate fp32) and the
+    # combined output is cast back to the caller's dtype at the end.
+    in_dtype = q.dtype
+    q, k, v = score_dtype_cast(cfg, q, k, v)
+
     bk = resolve_branch_backends(cfg)
     out_local = _local_branch(q, k, v, mask, cfg, bk["ball"])
 
@@ -157,10 +164,16 @@ def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
     v_cmp = phi_apply(params["phi_v"], v, mask, cfg)
     blk_valid = block_validity(mask, B, N, ell)
     # block-causal rule (query t sees coarse key j iff block j ends before t)
-    # is generated by the backend — in-kernel on pallas, bias on jnp
+    # is generated by the backend — in-kernel on pallas, bias on jnp.
+    # q_valid is an occupancy HINT (padded query rows are masked by the
+    # combine epilogue, so kernels may skip whole dead query tiles);
+    # probed by signature so third-party backends keep working.
+    kw = ({"q_valid": mask}
+          if mask is not None and accepts_kwarg(bk["cmp"].flash, "q_valid")
+          else {})
     out_cmp = bk["cmp"].flash(q, k_cmp, v_cmp, key_valid=blk_valid,
                               block_causal=True, ell=ell,
-                              chunk_tokens=cfg.jnp_chunk_tokens)
+                              chunk_tokens=cfg.jnp_chunk_tokens, **kw)
 
     # --- selection ---
     out_slc, top_idx = _causal_selection(params, q, k, v, k_cmp, blk_valid,
@@ -170,7 +183,7 @@ def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
     # fused epilogue: gate + sum + query-mask in one pass (see core/bsa.py)
     out = get_combine(bk["ball"])(
         (out_local, out_cmp, out_slc),
-        (gates["ball"], gates["cmp"], gates["slc"]), mask)
+        (gates["ball"], gates["cmp"], gates["slc"]), mask).astype(in_dtype)
     if return_aux:
         return out, {"local": out_local, "cmp": out_cmp, "slc": out_slc,
                      "indices": top_idx, "gates": gates}

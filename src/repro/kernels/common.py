@@ -28,6 +28,44 @@ from repro.numerics import NEG_INF  # noqa: F401 — shared constant, re-exporte
 LSE_EMPTY = 1e30
 
 
+def fp8_enabled() -> bool:
+    """Opt-in fp8 QK^T experiment (REPRO_FP8=1).  Off by default."""
+    return os.environ.get("REPRO_FP8", "") not in ("", "0", "false", "False")
+
+
+def resolve_compute_dtype(dtype) -> str:
+    """Input dtype → canonical MATMUL-OPERAND dtype name for the kernels.
+
+    The kernel-level precision contract (docs/architecture.md):
+
+      * fp32/fp64 inputs compute in fp32 — bit-identical to the historical
+        force-upcast behaviour;
+      * sub-fp32 inputs (bf16/fp16) keep their storage dtype as the matmul
+        operand dtype — Q/K/V tiles stay bf16 through QK^T and PV — while
+        every ``dot_general`` accumulates fp32 (``preferred_element_type``)
+        and all softmax statistics / lse / scratch stay fp32;
+      * with REPRO_FP8=1, sub-fp32 inputs use float8_e4m3fn for the QK^T
+        OPERANDS only (the experiment); non-QK matmuls stay ≥ 16-bit via
+        ``mma_dtype``.
+
+    Returns a canonical dtype NAME (hashable, cache-key friendly).
+    """
+    d = jnp.dtype(dtype)
+    if d.itemsize >= 4:
+        return "float32"
+    if fp8_enabled() and hasattr(jnp, "float8_e4m3fn"):
+        return "float8_e4m3fn"
+    return d.name
+
+
+def mma_dtype(compute: str) -> str:
+    """Operand dtype for the non-QK^T matmuls (PV, dP, dQ, dK, dV).
+
+    fp8 is a QK^T-only experiment: everything else never drops below
+    16 bits, so gradients and the PV contraction keep bf16 operands."""
+    return "bfloat16" if jnp.dtype(compute).itemsize == 1 else compute
+
+
 def should_interpret() -> bool:
     env = os.environ.get("REPRO_PALLAS_INTERPRET")
     if env is not None:

@@ -1,0 +1,189 @@
+"""Tile-occupancy: host-side per-tile liveness precompute + a counter seam.
+
+The varlen kernel (PR 6) proved the pattern: precompute, on the host, which
+(q-tile, k-tile) grid cells can possibly contribute — from packed-segment
+ranges there — ship the verdicts into the kernel as SCALAR-PREFETCH operands
+(``pltpu.PrefetchScalarGridSpec``), and wrap the tile body in ``pl.when`` so
+a dead cell issues no matmuls.  This module generalises the precompute to
+every liveness source the BSA kernels see:
+
+  * **key-tile validity** — a tile whose keys are ALL masked (additive bias
+    ≤ NEG_INF/2) contributes exactly nothing: the kernels zero its p in
+    logit space anyway, so skipping it is bit-exact, forward and backward.
+  * **query-tile validity** — rows whose queries are padding produce values
+    nobody reads (the model masks them at the combine epilogue); a q-tile
+    with no valid query can skip, leaving zeros / LSE_EMPTY behind.
+  * **causal / block-causal structure** — the static triangular shape of
+    the flash mask modes, decided per (i, j) from indices alone.
+  * **packed-segment ranges** — the original varlen overlap test, kept here
+    so all kernels share one definition.
+
+Every helper returns int32 (the SMEM-friendly prefetch dtype); a cell is
+live iff its entry is non-zero.  Liveness is conservative: a live verdict
+for a tile that happens to contribute nothing costs only the old (compute
+then mask) behaviour; a DEAD verdict must be exact, which each predicate
+here guarantees — dead tiles match the repo-wide "all-masked rows produce
+exact zeros" contract, so skipped outputs and gradients equal the jnp
+oracle bit-for-bit.
+
+``record_occupancy`` / ``record`` are the audit seam: the kernel wrappers
+report each launch's live map, and ``benchmarks/perf_iter.py --occupancy``
+sums live/total per kernel from one eager forward.  Recording no-ops under
+jit (tracers carry no counts) and when no recorder is active.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.numerics import NEG_INF
+
+__all__ = ["key_tile_live", "query_tile_live", "causal_tile_live",
+           "flash_live_map", "tile_seg_ranges", "ranges_overlap",
+           "ranges_live_map", "group_live", "invalidate_dead_groups",
+           "record_occupancy", "record"]
+
+
+# ---------------------------------------------------------------------------
+# host-side liveness builders
+# ---------------------------------------------------------------------------
+
+def key_tile_live(key_bias: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """(B, L) fp32 additive key bias → (B, L/tile) bool: does any key of the
+    tile carry weight?  A key is dead when its bias is at or below the
+    NEG_INF/2 guard — the same threshold the kernels use to zero p, so a
+    False here means the tile contributes exactly nothing."""
+    B, L = key_bias.shape
+    return (key_bias.reshape(B, L // tile, tile) > NEG_INF / 2).any(-1)
+
+
+def query_tile_live(q_valid: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """(B, N) bool query validity → (B, N/tile) bool any-valid-query."""
+    B, N = q_valid.shape
+    return q_valid.reshape(B, N // tile, tile).any(-1)
+
+
+def causal_tile_live(n_q: int, n_k: int, tq: int, tk: int, *,
+                     causal: bool = False, block_causal: bool = False,
+                     ell: int = 1) -> np.ndarray:
+    """Static (nQ, nK) bool structural liveness of the flash mask modes.
+
+    Tile (i, j) is live iff ANY (q, k) pair inside it passes the mask; the
+    extreme pair is (last query of tile i, first key of tile j) because both
+    masks are monotone in the query position and anti-monotone in the key
+    index.  Plain mode: everything live.  Pure numpy — the verdicts depend
+    only on static tile geometry."""
+    qmax = (np.arange(n_q) + 1) * tq - 1          # last query position, tile i
+    kmin = np.arange(n_k) * tk                    # first key index, tile j
+    if block_causal:
+        ok = (kmin[None, :] + 1) * ell - 1 < qmax[:, None]
+    elif causal:
+        ok = kmin[None, :] <= qmax[:, None]
+    else:
+        ok = np.ones((n_q, n_k), bool)
+    return ok
+
+
+def flash_live_map(key_bias: jnp.ndarray, tq: int, tk: int, n_q: int, *,
+                   q_valid: jnp.ndarray | None = None, causal: bool = False,
+                   block_causal: bool = False, ell: int = 1) -> jnp.ndarray:
+    """Combined (B, nQ, nK) int32 prefetch map for the flash kernels: a cell
+    is live iff its key tile has a valid key AND (when ``q_valid`` is given)
+    its query tile has a valid query AND the causal structure admits it."""
+    kt = key_tile_live(key_bias, tk)                       # (B, nK)
+    live = jnp.broadcast_to(kt[:, None, :], (kt.shape[0], n_q, kt.shape[1]))
+    if q_valid is not None:
+        live = live & query_tile_live(q_valid, tq)[:, :, None]
+    struct = causal_tile_live(n_q, kt.shape[1], tq, tk, causal=causal,
+                              block_causal=block_causal, ell=ell)
+    return (live & jnp.asarray(struct)[None]).astype(jnp.int32)
+
+
+def tile_seg_ranges(seg: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """(Tp,) monotone segment ids → (2, Tp/tile) per-tile [min, max] int32
+    (the scalar-prefetch operand of the varlen kernel)."""
+    blocks = seg.reshape(-1, tile)
+    return jnp.stack([blocks[:, 0], blocks[:, -1]]).astype(jnp.int32)
+
+
+def ranges_overlap(qrng, krng, i, j):
+    """In-kernel: do q-tile i and k-tile j share at least one segment id?
+
+    Segment ids are monotone along the packed axis, so the per-tile
+    [min, max] ranges overlap iff some sample has rows in both tiles."""
+    return (krng[0, j] <= qrng[1, i]) & (qrng[0, i] <= krng[1, j])
+
+
+def ranges_live_map(qrng: jnp.ndarray, krng: jnp.ndarray) -> jnp.ndarray:
+    """Host-side twin of ``ranges_overlap``: (2, nQ) × (2, nK) → (nQ, nK)
+    bool — what the varlen grid will actually run (used for auditing)."""
+    return ((krng[0][None, :] <= qrng[1][:, None])
+            & (qrng[0][:, None] <= krng[1][None, :]))
+
+
+def group_live(mask: jnp.ndarray, n_groups: int) -> jnp.ndarray:
+    """(B, N) bool token validity → (B, G) bool: any valid token in the
+    query group."""
+    B, N = mask.shape
+    return mask.reshape(B, n_groups, N // n_groups).any(-1)
+
+
+def invalidate_dead_groups(sel_valid: jnp.ndarray, mask: jnp.ndarray | None,
+                           n_tokens: int) -> jnp.ndarray:
+    """Mark every selection of an all-masked query group invalid.
+
+    ``sel_valid``: (B, G, …) selection validity; ``mask``: (B, N) bool token
+    validity or None.  A group whose query tokens are all padding produces
+    rows nobody reads — invalidating its selections lets the kernel skip
+    those grid cells AND makes the jnp oracle emit exact zeros for them, so
+    both paths agree (the shared contract all selection front-ends apply)."""
+    if mask is None:
+        return sel_valid
+    G = sel_valid.shape[1]
+    live = group_live(mask[:, :n_tokens], G)               # (B, G)
+    return sel_valid & live[(...,) + (None,) * (sel_valid.ndim - 2)]
+
+
+# ---------------------------------------------------------------------------
+# occupancy recording (the --occupancy audit seam)
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def record_occupancy():
+    """Collect per-kernel {live, total} tile counts from wrapper launches.
+
+        with record_occupancy() as counts:
+            bsa_attention(...)            # eager — tracers are not counted
+        counts == {"flash": {"live": 11, "total": 16}, ...}
+
+    Counts are per KV head and per launch (grid cells over the batch·tile
+    axes); nested recorders shadow the outer one."""
+    counts: dict = {}
+    prev = getattr(_TLS, "counts", None)
+    _TLS.counts = counts
+    try:
+        yield counts
+    finally:
+        _TLS.counts = prev
+
+
+def record(kernel: str, live) -> None:
+    """Report one launch's liveness array (any shape; non-zero = live).
+
+    No-op when no recorder is active or ``live`` is a tracer (jitted calls
+    cannot be counted — run the forward eagerly to audit)."""
+    counts = getattr(_TLS, "counts", None)
+    if counts is None or isinstance(live, jax.core.Tracer):
+        return
+    arr = np.asarray(live)
+    entry = counts.setdefault(kernel, {"live": 0, "total": 0})
+    entry["live"] += int((arr != 0).sum())
+    entry["total"] += int(arr.size)

@@ -15,14 +15,25 @@ Shape/dtype contract (shared by all four attention wrappers):
     Query head h·rep + r belongs to KV head h (the ``branches.repeat_kv``
     convention, kept so the jnp reference pins semantics).
   * ``mask`` / ``key_valid`` is a (B, L) bool array, True = real token.
-    It masks KEYS only — padded queries still compute rows (they are cheap
-    and keep shapes static); the model zeroes their outputs.  Internally the
-    mask becomes an additive fp32 key bias (0 valid / NEG_INF = −1e30
-    padding) applied in LOGIT space, which is also exactly what the fused
-    backward kernels recompute — so masked keys receive exactly zero
-    gradient.  A query row whose keys are ALL masked returns zeros.
+    It masks KEYS only.  Internally the mask becomes an additive fp32 key
+    bias (0 valid / NEG_INF = −1e30 padding) applied in LOGIT space, which
+    is also exactly what the fused backward kernels recompute — so masked
+    keys receive exactly zero gradient.  A query row whose keys are ALL
+    masked returns zeros.
+  * ``q_valid`` (where accepted) is an OPTIMIZATION-ONLY hint: rows whose
+    queries are padding produce UNSPECIFIED values (the kernels may skip
+    whole dead q-tiles, leaving zeros; the jnp backend ignores the hint) —
+    the model masks padded rows at the combine epilogue either way.
   * Any floating dtype is accepted (fp32 and bf16 are tested); softmax
-    statistics are always fp32 inside the kernels.
+    statistics are always fp32 inside the kernels.  The matmul-OPERAND
+    dtype follows the kernel precision contract
+    (``common.resolve_compute_dtype``): bf16 inputs keep bf16 tiles through
+    QK^T and PV with fp32 accumulation; REPRO_FP8=1 opts QK^T into fp8.
+  * TILE-OCCUPANCY SKIPPING (``kernels/occupancy.py``): every wrapper
+    precomputes per-tile liveness from its mask / causal structure /
+    offsets, ships it to the kernel as a scalar-prefetch operand, and
+    reports it to ``occupancy.record`` so ``perf_iter.py --occupancy`` can
+    audit the live/total tile ratio.
 
 Tiles and padding: ``flash_attention`` resolves its (tq, tk) tiles through
 ``kernels/tuning.py`` (cache → autotune → deterministic heuristic) and PADS
@@ -50,8 +61,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels import tuning
+from repro.kernels import occupancy, tuning
 from repro.kernels.bta import ball_attention_kernel_call
+from repro.kernels.common import resolve_compute_dtype
 from repro.kernels.epilogue import gated_combine_kernel_call
 from repro.kernels.flash import flash_attention_kernel_call
 from repro.kernels.local import local_window_kernel_call
@@ -101,14 +113,17 @@ def ball_attention(q, k, v, mask, ball_size: int, *,
     """
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
+    kb = key_padding_bias(mask, B, N)
+    occupancy.record("bta", occupancy.key_tile_live(kb, ball_size))
     out = ball_attention_kernel_call(
-        _to_grouped(q, Hkv), _to_bh(k), _to_bh(v), key_padding_bias(mask, B, N),
-        ball_size=ball_size, n_heads=Hkv, interpret=interpret)
+        _to_grouped(q, Hkv), _to_bh(k), _to_bh(v), kb,
+        ball_size=ball_size, n_heads=Hkv, interpret=interpret,
+        compute=resolve_compute_dtype(q.dtype))
     return _from_grouped(out, B, Hkv)
 
 
 def flash_attention(q, k, v, *, key_valid=None, causal=False,
-                    block_causal=False, ell=1, bias=None,
+                    block_causal=False, ell=1, bias=None, q_valid=None,
                     tq: int | None = None, tk: int | None = None,
                     interpret: bool | None = None):
     """Streaming-softmax attention of q vs an arbitrary-length K/V.
@@ -134,10 +149,12 @@ def flash_attention(q, k, v, *, key_valid=None, causal=False,
     if interpret is None:
         from repro.kernels.common import should_interpret
         interpret = should_interpret()
+    compute = resolve_compute_dtype(q.dtype)
     if tq is None or tk is None:
         atq, atk = tuning.get_tiles(
             "flash", n_q=N, n_k=L, d=D, dtype=q.dtype, interpret=interpret,
             variant=tuning.flash_variant(causal, block_causal, ell),
+            compute=compute,
             measure=_flash_measure(N, L, D, q.dtype, causal, block_causal,
                                    ell, interpret))
         tq = tq or atq
@@ -157,11 +174,17 @@ def flash_attention(q, k, v, *, key_valid=None, causal=False,
         kb = jnp.pad(kb, ((0, 0), (0, Lp - L)), constant_values=NEG_INF)
     if Np != N:
         q = jnp.pad(q, ((0, 0), (0, Np - N), (0, 0), (0, 0)))
+        if q_valid is not None:
+            q_valid = jnp.pad(q_valid, ((0, 0), (0, Np - N)))
 
+    live = occupancy.flash_live_map(kb, tq, tk, Np // tq, q_valid=q_valid,
+                                    causal=causal, block_causal=block_causal,
+                                    ell=ell)
+    occupancy.record("flash", live)
     out = flash_attention_kernel_call(
-        _to_grouped(q, Hkv), _to_bh(k), _to_bh(v), kb, n_heads=Hkv,
+        _to_grouped(q, Hkv), _to_bh(k), _to_bh(v), kb, live, n_heads=Hkv,
         causal=causal, block_causal=block_causal, ell=ell, tq=tq, tk=tk,
-        interpret=interpret)
+        interpret=interpret, compute=compute)
     out = _from_grouped(out, B, Hkv)
     return out[:, :N] if Np != N else out
 
@@ -191,10 +214,25 @@ def local_window_attention(q, k, v, window: int, mask=None, *,
     Returns (B, N, Hq, D).  Differentiable in q, k, v."""
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
+    kb = key_padding_bias(mask, B, N)
+    occupancy.record("local", _local_half_live(kb, window))
     out = local_window_kernel_call(
-        _to_grouped(q, Hkv), _to_bh(k), _to_bh(v), key_padding_bias(mask, B, N),
-        window=window, n_heads=Hkv, interpret=interpret)
+        _to_grouped(q, Hkv), _to_bh(k), _to_bh(v), kb,
+        window=window, n_heads=Hkv, interpret=interpret,
+        compute=resolve_compute_dtype(q.dtype))
     return _from_grouped(out, B, Hkv)
+
+
+def _local_half_live(key_bias, window, blk_seg=None):
+    """(B, n_b, 2) bool — the two ``pl.when`` half-steps of each local grid
+    cell (prev half, self half), exactly what ``kernels/local.py`` skips."""
+    kv = occupancy.key_tile_live(key_bias, window)            # (B, n_b)
+    self_live = kv
+    prev_live = jnp.pad(kv[:, :-1], ((0, 0), (1, 0)))         # block 0: none
+    if blk_seg is not None:
+        same = jnp.pad(blk_seg[:, 1:] == blk_seg[:, :-1], ((0, 0), (1, 0)))
+        prev_live = prev_live & same
+    return jnp.stack([prev_live, self_live], axis=-1)
 
 
 def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
@@ -226,6 +264,7 @@ def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
            .reshape(B, Hkv, G, g * rep, D))
     kb = k.reshape(B, nb, ell, Hkv, D).transpose(0, 3, 1, 2, 4)   # (B,Hkv,NB,ℓ,D)
     vb = v.reshape(B, nb, ell, Hkv, D).transpose(0, 3, 1, 2, 4)
+    sel_valid = occupancy.invalidate_dead_groups(sel_valid, mask, N)
     idx = jnp.where(sel_valid, top_idx, -1).astype(jnp.int32)
     idx = idx.transpose(0, 2, 1, 3)                               # (B,Hkv,G,k*)
     if mask is None:
@@ -233,8 +272,10 @@ def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
     else:
         tok_bias = jnp.where(mask.reshape(B, nb, ell), 0.0, NEG_INF).astype(jnp.float32)
 
+    occupancy.record("selection", idx >= 0)
     out = selection_attention_kernel_call(qg, kb, vb, idx, tok_bias,
-                                          interpret=interpret)
+                                          interpret=interpret,
+                                          compute=resolve_compute_dtype(q.dtype))
     return (out.reshape(B, Hkv, G, g, rep, D)
                .transpose(0, 2, 3, 1, 4, 5)
                .reshape(B, N, Hq, D))
@@ -252,12 +293,6 @@ def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
 # skipping (``kernels/varlen.py``), or from the structural guarantee that
 # balls / blocks never straddle an offsets boundary.
 # ---------------------------------------------------------------------------
-
-def _tile_seg_ranges(seg, tile):
-    """(Tp,) monotone segment ids → (2, Tp/tile) per-tile [min, max] int32."""
-    blocks = seg.reshape(-1, tile)
-    return jnp.stack([blocks[:, 0], blocks[:, -1]]).astype(jnp.int32)
-
 
 def flash_attention_varlen(q, k, v, q_offsets, k_offsets, *, key_valid=None,
                            tq: int | None = None, tk: int | None = None,
@@ -283,10 +318,11 @@ def flash_attention_varlen(q, k, v, q_offsets, k_offsets, *, key_valid=None,
     if interpret is None:
         from repro.kernels.common import should_interpret
         interpret = should_interpret()
+    compute = resolve_compute_dtype(q.dtype)
     if tq is None or tk is None:
         atq, atk = tuning.get_tiles(
             "flash", n_q=T, n_k=L, d=D, dtype=q.dtype, interpret=interpret,
-            variant="plain", layout="varlen")
+            variant="plain", layout="varlen", compute=compute)
         tq = tq or atq
         tk = tk or atk
     tq, tk = min(tq, tuning.round_up(T, 8)), min(tk, tuning.round_up(L, 8))
@@ -306,12 +342,14 @@ def flash_attention_varlen(q, k, v, q_offsets, k_offsets, *, key_valid=None,
     # invisible to real ones by the in-kernel equality test
     qseg = segment_ids_from_offsets(q_offsets, Tp)
     kseg = segment_ids_from_offsets(k_offsets, Lp)
+    qrng = occupancy.tile_seg_ranges(qseg, tq)
+    krng = occupancy.tile_seg_ranges(kseg, tk)
+    occupancy.record("varlen_flash", occupancy.ranges_live_map(qrng, krng))
 
     out = flash_attention_varlen_kernel_call(
         _to_grouped(q[None], Hkv), _to_bh(k[None]), _to_bh(v[None]), kb,
-        qseg[None], kseg[None],
-        _tile_seg_ranges(qseg, tq), _tile_seg_ranges(kseg, tk),
-        tq=tq, tk=tk, interpret=interpret)
+        qseg[None], kseg[None], qrng, krng,
+        tq=tq, tk=tk, interpret=interpret, compute=compute)
     out = _from_grouped(out, 1, Hkv)[0]
     return out[:T] if Tp != T else out
 
@@ -348,10 +386,12 @@ def local_window_attention_varlen(q, k, v, offsets, window: int, mask=None, *,
     Hkv = k.shape[1]
     seg = segment_ids_from_offsets(offsets, T)
     blk_seg = seg.reshape(T // window, window)[:, 0][None]     # (1, n_b)
+    kb = key_padding_bias(mask[None] if mask is not None else None, 1, T)
+    occupancy.record("local", _local_half_live(kb, window, blk_seg))
     out = local_window_kernel_call(
-        _to_grouped(q[None], Hkv), _to_bh(k[None]), _to_bh(v[None]),
-        key_padding_bias(mask[None] if mask is not None else None, 1, T),
-        window=window, n_heads=Hkv, interpret=interpret, blk_seg=blk_seg)
+        _to_grouped(q[None], Hkv), _to_bh(k[None]), _to_bh(v[None]), kb,
+        window=window, n_heads=Hkv, interpret=interpret, blk_seg=blk_seg,
+        compute=resolve_compute_dtype(q.dtype))
     return _from_grouped(out, 1, Hkv)[0]
 
 

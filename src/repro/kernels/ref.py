@@ -41,7 +41,11 @@ def flash_attention_ref(q, k, v, *, key_valid=None, causal=False,
 
 def selection_attention_ref(q, k, v, top_idx, sel_valid, mask, *,
                             block_size: int, group_size: int):
-    """Oracle for ops.selection_attention (mirrors core's gather math)."""
+    """Oracle for ops.selection_attention (mirrors core's gather math,
+    including the dead-group invalidation: all-padded query groups attend
+    nothing and emit exact zeros, like the kernel's skipped tiles)."""
+    from repro.kernels.occupancy import invalidate_dead_groups
+    sel_valid = invalidate_dead_groups(sel_valid, mask, q.shape[1])
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
     rep = Hq // Hkv

@@ -15,8 +15,16 @@ group.  The M (rows) dimension of every matmul is the whole query group
 ℓ=8 blocks — exactly the hardware-alignment rationale of NSA group fetch.
 
 Invalid selections are encoded as index −1: the index map clamps them to 0
-(a harmless fetch) and the kernel skips their accumulation via ``pl.when``
-(forward) or a multiplicative validity gate (backward).
+(a harmless fetch) and the kernel skips their matmuls via ``pl.when`` in
+BOTH directions — the backward's dead branch writes its dK/dV staging tiles
+as exact zeros.  The selection front-ends additionally invalidate every
+selection of an all-padding query group (``occupancy.invalidate_dead_groups``),
+so a ragged batch's dead groups skip their whole k* sweep.
+
+PRECISION CONTRACT (``common.resolve_compute_dtype``): operand tiles cast
+to the compute dtype (bf16 in → bf16 through QK^T and PV, fp8 QK^T under
+REPRO_FP8=1) while every ``dot_general`` accumulates fp32 and the softmax
+statistics stay fp32.
 
 Differentiable: the forward emits per-row logsumexp; the backward kernel
 runs on the same scalar-prefetched grid, recomputes p = exp(s − lse) per
@@ -36,7 +44,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import (NEG_INF, interpret_batch_map, lse_finalize,
-                                  p_from_lse, should_interpret)
+                                  mma_dtype, p_from_lse, resolve_compute_dtype,
+                                  should_interpret)
 
 __all__ = ["selection_attention_kernel_call"]
 
@@ -44,11 +53,13 @@ __all__ = ["selection_attention_kernel_call"]
 def _fwd_kernel(idx_ref,                 # scalar prefetch (B, Hkv, G, k*) int32
                 q_ref, k_ref, v_ref, tokbias_ref,
                 o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
-                scale: float, k_star: int):
+                scale: float, k_star: int, compute: str):
     b = pl.program_id(0)
     h = pl.program_id(1)
     g = pl.program_id(2)
     j = pl.program_id(3)
+    sdt = jnp.dtype(compute)
+    adt = jnp.dtype(mma_dtype(compute))
 
     @pl.when(j == 0)
     def _init():
@@ -60,9 +71,9 @@ def _fwd_kernel(idx_ref,                 # scalar prefetch (B, Hkv, G, k*) int32
 
     @pl.when(valid)
     def _accumulate():
-        q = q_ref[0, 0, 0].astype(jnp.float32)             # (M, D)
-        k = k_ref[0, 0, 0].astype(jnp.float32)             # (ℓ, D)
-        v = v_ref[0, 0, 0]
+        q = q_ref[0, 0, 0].astype(sdt)                     # (M, D)
+        k = k_ref[0, 0, 0].astype(sdt)                     # (ℓ, D)
+        v = v_ref[0, 0, 0].astype(adt)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         s = s + tokbias_ref[0]                             # (ℓ,) padding bias
@@ -76,7 +87,7 @@ def _fwd_kernel(idx_ref,                 # scalar prefetch (B, Hkv, G, k*) int32
         m_scr[...] = m_new
         l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
         acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
-            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            p.astype(adt), v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
 
     @pl.when(j == k_star - 1)
@@ -92,48 +103,58 @@ def _fwd_kernel(idx_ref,                 # scalar prefetch (B, Hkv, G, k*) int32
 def _bwd_kernel(idx_ref,
                 q_ref, k_ref, v_ref, tokbias_ref, do_ref, lse_ref, delta_ref,
                 dq_ref, dkb_ref, dvb_ref, dq_scr, *,
-                scale: float, k_star: int):
+                scale: float, k_star: int, compute: str):
     b = pl.program_id(0)
     h = pl.program_id(1)
     g = pl.program_id(2)
     j = pl.program_id(3)
+    sdt = jnp.dtype(compute)
+    adt = jnp.dtype(mma_dtype(compute))
 
     @pl.when(j == 0)
     def _init():
         dq_scr[...] = jnp.zeros_like(dq_scr)
 
-    # Invalid selections fetched a clamped (harmless) block; kill them in
-    # LOGIT space (not by scaling p) so a clamped-block logit above the
-    # group's lse can't overflow exp() into inf·0 = NaN.  dkb/dvb tiles are
-    # still written — as exact zeros.
+    # Invalid selections fetched a clamped (harmless) block; their grid cell
+    # skips all five matmuls and writes its dkb/dvb staging tiles as exact
+    # zeros — p ≡ 0 there in the oracle, so the skip is bit-exact.
     valid = idx_ref[b, h, g, j] >= 0
-    q = q_ref[0, 0, 0].astype(jnp.float32)                 # (M, D)
-    k = k_ref[0, 0, 0].astype(jnp.float32)                 # (ℓ, D)
-    v = v_ref[0, 0, 0].astype(jnp.float32)
-    do = do_ref[0, 0, 0].astype(jnp.float32)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    s = s + tokbias_ref[0]
-    s = jnp.where(valid, s, NEG_INF)
-    p = p_from_lse(s, lse_ref[0, 0, 0][:, None])           # (M, ℓ)
-    dvb_ref[0, 0, 0, 0] = jax.lax.dot_general(
-        p, do, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(dvb_ref.dtype)
-    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    ds = p * (dp - delta_ref[0, 0, 0][:, None]) * scale
-    dkb_ref[0, 0, 0, 0] = jax.lax.dot_general(
-        ds, q, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32).astype(dkb_ref.dtype)
-    dq_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
-                                       preferred_element_type=jnp.float32)
+
+    @pl.when(valid)
+    def _live_sel():
+        q = q_ref[0, 0, 0].astype(sdt)                     # (M, D)
+        k = k_ref[0, 0, 0].astype(sdt)                     # (ℓ, D)
+        v = v_ref[0, 0, 0].astype(adt)
+        do = do_ref[0, 0, 0].astype(adt)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = s + tokbias_ref[0]
+        p = p_from_lse(s, lse_ref[0, 0, 0][:, None])       # (M, ℓ)
+        dvb_ref[0, 0, 0, 0] = jax.lax.dot_general(
+            p.astype(adt), do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dvb_ref.dtype)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_ref[0, 0, 0][:, None]) * scale
+        dkb_ref[0, 0, 0, 0] = jax.lax.dot_general(
+            ds.astype(adt), q_ref[0, 0, 0].astype(adt),
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dkb_ref.dtype)
+        dq_scr[...] += jax.lax.dot_general(ds.astype(adt), k.astype(adt),
+                                           (((1,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_not(valid))
+    def _dead_sel():
+        dvb_ref[0, 0, 0, 0] = jnp.zeros_like(dvb_ref[0, 0, 0, 0])
+        dkb_ref[0, 0, 0, 0] = jnp.zeros_like(dkb_ref[0, 0, 0, 0])
 
     @pl.when(j == k_star - 1)
     def _finalize():
         dq_ref[0, 0, 0] = dq_scr[...].astype(dq_ref.dtype)
 
 
-def _fwd_call(q, kb, vb, idx, tok_bias, *, interpret):
+def _fwd_call(q, kb, vb, idx, tok_bias, *, interpret, compute):
     B, Hkv, G, M, D = q.shape
     ell = kb.shape[3]
     k_star = idx.shape[-1]
@@ -168,7 +189,8 @@ def _fwd_call(q, kb, vb, idx, tok_bias, *, interpret):
         ],
     )
     return pl.pallas_call(
-        functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5), k_star=k_star),
+        functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5), k_star=k_star,
+                          compute=compute),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((B, Hkv, G, M, D), q.dtype),
                    jax.ShapeDtypeStruct((B, Hkv, G, M), jnp.float32)),
@@ -176,7 +198,8 @@ def _fwd_call(q, kb, vb, idx, tok_bias, *, interpret):
     )(idx, q, kb, vb, tok_bias)
 
 
-def _bwd_call(q, kb, vb, idx, tok_bias, do, lse, delta, *, interpret):
+def _bwd_call(q, kb, vb, idx, tok_bias, do, lse, delta, *, interpret,
+              compute):
     B, Hkv, G, M, D = q.shape
     ell = kb.shape[3]
     k_star = idx.shape[-1]
@@ -214,7 +237,8 @@ def _bwd_call(q, kb, vb, idx, tok_bias, do, lse, delta, *, interpret):
         scratch_shapes=[pltpu.VMEM((M, D), jnp.float32)],
     )
     return pl.pallas_call(
-        functools.partial(_bwd_kernel, scale=1.0 / (D ** 0.5), k_star=k_star),
+        functools.partial(_bwd_kernel, scale=1.0 / (D ** 0.5), k_star=k_star,
+                          compute=compute),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((B, Hkv, G, M, D), q.dtype),
                    jax.ShapeDtypeStruct((B, Hkv, G, k_star, ell, D), kb.dtype),
@@ -242,20 +266,22 @@ def _scatter_blocks(d_sel, idx, nb: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _make_vjp(interpret: bool):
+def _make_vjp(interpret: bool, compute: str):
+    kw = dict(interpret=interpret, compute=compute)
+
     @jax.custom_vjp
     def attend(q, kb, vb, idx, tok_bias):
-        return _fwd_call(q, kb, vb, idx, tok_bias, interpret=interpret)[0]
+        return _fwd_call(q, kb, vb, idx, tok_bias, **kw)[0]
 
     def attend_fwd(q, kb, vb, idx, tok_bias):
-        o, lse = _fwd_call(q, kb, vb, idx, tok_bias, interpret=interpret)
+        o, lse = _fwd_call(q, kb, vb, idx, tok_bias, **kw)
         return o, (q, kb, vb, idx, tok_bias, o, lse)
 
     def attend_bwd(res, do):
         q, kb, vb, idx, tok_bias, o, lse = res
         delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
         dq, dkb_sel, dvb_sel = _bwd_call(q, kb, vb, idx, tok_bias, do, lse,
-                                         delta, interpret=interpret)
+                                         delta, **kw)
         nb = kb.shape[2]
         dkb = _scatter_blocks(dkb_sel, idx, nb)
         dvb = _scatter_blocks(dvb_sel, idx, nb)
@@ -265,9 +291,10 @@ def _make_vjp(interpret: bool):
     return attend
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "compute"))
 def selection_attention_kernel_call(q, kb, vb, idx, tok_bias, *,
-                                    interpret: bool | None = None):
+                                    interpret: bool | None = None,
+                                    compute: str | None = None):
     """Compute group-selected attention.
 
     q:        (B, Hkv, G, M, D)   query groups (M = g·rep rows)
@@ -280,7 +307,10 @@ def selection_attention_kernel_call(q, kb, vb, idx, tok_bias, *,
     """
     if interpret is None:
         interpret = should_interpret()
+    if compute is None:
+        compute = resolve_compute_dtype(q.dtype)
     if interpret and q.shape[0] > 1:
         # CPU fallback: per-sample grids keep the interpreter linear in B
-        return interpret_batch_map(_make_vjp(True), q, kb, vb, idx, tok_bias)
-    return _make_vjp(interpret)(q, kb, vb, idx, tok_bias)
+        return interpret_batch_map(_make_vjp(True, compute),
+                                   q, kb, vb, idx, tok_bias)
+    return _make_vjp(interpret, compute)(q, kb, vb, idx, tok_bias)

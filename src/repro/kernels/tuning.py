@@ -139,12 +139,16 @@ def heuristic_tile(n: int, pref: int) -> int:
 # ---------------------------------------------------------------------------
 
 def _key(kernel: str, *, n_q: int, n_k: int, d: int, dtype, interpret: bool,
-         variant: str = "", layout: str = "") -> str:
+         variant: str = "", layout: str = "", compute: str = "") -> str:
     mode = "interpret" if interpret else "compiled"
     v = f"/{variant}" if variant else ""
     lay = f"/{layout}" if layout else ""
+    # compute = the matmul-OPERAND dtype of the precision contract.  It joins
+    # the key only when it differs from the storage dtype's own resolution,
+    # so pre-contract cache entries stay valid for the default path.
+    cmp_ = f"/c:{compute}" if compute and compute != "float32" else ""
     return (f"{kernel}/q{shape_bucket(n_q)}_k{shape_bucket(n_k)}_d{d}"
-            f"/{str(dtype)}/{mode}{v}{lay}")
+            f"/{str(dtype)}/{mode}{v}{lay}{cmp_}")
 
 
 def flash_variant(causal: bool, block_causal: bool, ell: int) -> str:
@@ -169,7 +173,7 @@ def flash_candidates(n_q: int, n_k: int) -> list[tuple[int, int]]:
 
 def get_tiles(kernel: str, *, n_q: int, n_k: int, d: int, dtype,
               interpret: bool, measure=None, variant: str = "",
-              layout: str = "",
+              layout: str = "", compute: str = "",
               prefs: tuple[int, int] = (256, 256)) -> tuple[int, int]:
     """Resolve (tq, tk) for one kernel launch.
 
@@ -179,13 +183,16 @@ def get_tiles(kernel: str, *, n_q: int, n_k: int, d: int, dtype,
     (B, L) batches vs ``"varlen"`` for the packed-offsets layout, whose
     per-tile segment masking / tile skipping changes the cost profile, so a
     tile measured on one layout must never be replayed on the other.
+    ``compute`` is the matmul-operand dtype of the precision contract
+    (``common.resolve_compute_dtype``) — a tile tuned under bf16 or fp8
+    operands is never replayed for fp32 compute, and vice versa.
     ``measure(tq, tk) -> seconds`` is invoked per candidate ONLY on a cache
     miss with autotuning enabled; the winner is persisted.  Without a measure
     callback (or with autotune off / measure failure) the deterministic
     heuristic is returned and nothing is written.
     """
     key = _key(kernel, n_q=n_q, n_k=n_k, d=d, dtype=dtype, interpret=interpret,
-               variant=variant, layout=layout)
+               variant=variant, layout=layout, compute=compute)
     cache = _load()
     hit = cache.get(key)
     if hit:

@@ -45,8 +45,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import (NEG_INF, lse_finalize, p_from_lse,
+from repro.kernels.common import (NEG_INF, lse_finalize, mma_dtype,
+                                  p_from_lse, resolve_compute_dtype,
                                   should_interpret)
+from repro.kernels.occupancy import ranges_overlap
 
 __all__ = ["flash_attention_varlen_kernel_call"]
 
@@ -62,21 +64,15 @@ def _seg_mask(s, qs, ks, *, rep, tq):
     return jnp.where(qsr == ks[None, :], s, NEG_INF)
 
 
-def _live(qrng, krng, i, j):
-    """Do q-tile i and k-tile j share at least one segment id?
-
-    Segment ids are monotone along the packed axis, so the per-tile
-    [min, max] ranges overlap iff some sample has rows in both tiles."""
-    return (krng[0, j] <= qrng[1, i]) & (qrng[0, i] <= krng[1, j])
-
-
 def _fwd_kernel(qrng, krng, q_ref, k_ref, v_ref, kbias_ref, qs_ref, ks_ref,
                 o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
-                scale: float, n_k: int, tq: int, tk: int):
+                scale: float, n_k: int, tq: int, tk: int, compute: str):
     i = pl.program_id(1)
     j = pl.program_id(2)
     rep, _, D = q_ref.shape[1:]
     rows = rep * tq
+    sdt = jnp.dtype(compute)
+    adt = jnp.dtype(mma_dtype(compute))
 
     @pl.when(j == 0)
     def _init():
@@ -84,11 +80,11 @@ def _fwd_kernel(qrng, krng, q_ref, k_ref, v_ref, kbias_ref, qs_ref, ks_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    @pl.when(_live(qrng, krng, i, j))
+    @pl.when(ranges_overlap(qrng, krng, i, j))
     def _step():
-        q = q_ref[0].astype(jnp.float32).reshape(rows, D)  # (rep·Tq, D)
-        k = k_ref[0].astype(jnp.float32)                   # (Tk, D)
-        v = v_ref[0]
+        q = q_ref[0].astype(sdt).reshape(rows, D)          # (rep·Tq, D)
+        k = k_ref[0].astype(sdt)                           # (Tk, D)
+        v = v_ref[0].astype(adt)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         s = s + kbias_ref[0]                               # (Tk,) key-validity bias
@@ -104,7 +100,7 @@ def _fwd_kernel(qrng, krng, q_ref, k_ref, v_ref, kbias_ref, qs_ref, ks_ref,
         alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
         l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
         acc = acc_scr[...] * alpha + jax.lax.dot_general(
-            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            p.astype(adt), v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         m_scr[...] = m_new
         l_scr[...] = l_new
@@ -120,22 +116,24 @@ def _fwd_kernel(qrng, krng, q_ref, k_ref, v_ref, kbias_ref, qs_ref, ks_ref,
 
 def _dq_kernel(qrng, krng, q_ref, k_ref, v_ref, kbias_ref, qs_ref, ks_ref,
                do_ref, lse_ref, delta_ref, dq_ref, dq_scr, *,
-               scale: float, n_k: int, tq: int, tk: int):
+               scale: float, n_k: int, tq: int, tk: int, compute: str):
     i = pl.program_id(1)
     j = pl.program_id(2)
     rep, _, D = q_ref.shape[1:]
     rows = rep * tq
+    sdt = jnp.dtype(compute)
+    adt = jnp.dtype(mma_dtype(compute))
 
     @pl.when(j == 0)
     def _init():
         dq_scr[...] = jnp.zeros_like(dq_scr)
 
-    @pl.when(_live(qrng, krng, i, j))
+    @pl.when(ranges_overlap(qrng, krng, i, j))
     def _step():
-        q = q_ref[0].astype(jnp.float32).reshape(rows, D)
-        k = k_ref[0].astype(jnp.float32)
-        v = v_ref[0].astype(jnp.float32)
-        do = do_ref[0].astype(jnp.float32).reshape(rows, D)
+        q = q_ref[0].astype(sdt).reshape(rows, D)
+        k = k_ref[0].astype(sdt)
+        v = v_ref[0].astype(adt)
+        do = do_ref[0].astype(adt).reshape(rows, D)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         s = s + kbias_ref[0]
@@ -144,7 +142,8 @@ def _dq_kernel(qrng, krng, q_ref, k_ref, v_ref, kbias_ref, qs_ref, ks_ref,
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         ds = p * (dp - delta_ref[0].reshape(rows, 1)) * scale
-        dq_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+        dq_scr[...] += jax.lax.dot_general(ds.astype(adt), k.astype(adt),
+                                           (((1,), (0,)), ((), ())),
                                            preferred_element_type=jnp.float32)
 
     @pl.when(j == n_k - 1)
@@ -154,36 +153,40 @@ def _dq_kernel(qrng, krng, q_ref, k_ref, v_ref, kbias_ref, qs_ref, ks_ref,
 
 def _dkv_kernel(qrng, krng, q_ref, k_ref, v_ref, kbias_ref, qs_ref, ks_ref,
                 do_ref, lse_ref, delta_ref, dk_ref, dv_ref, dk_scr, dv_scr, *,
-                scale: float, n_q: int, tq: int, tk: int):
+                scale: float, n_q: int, tq: int, tk: int, compute: str):
     j = pl.program_id(1)                                   # K tile (outer)
     i = pl.program_id(2)                                   # Q tile (inner)
     rep, _, D = q_ref.shape[1:]
     rows = rep * tq
+    sdt = jnp.dtype(compute)
+    adt = jnp.dtype(mma_dtype(compute))
 
     @pl.when(i == 0)
     def _init():
         dk_scr[...] = jnp.zeros_like(dk_scr)
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
-    @pl.when(_live(qrng, krng, i, j))
+    @pl.when(ranges_overlap(qrng, krng, i, j))
     def _step():
-        q = q_ref[0].astype(jnp.float32).reshape(rows, D)
-        k = k_ref[0].astype(jnp.float32)
-        v = v_ref[0].astype(jnp.float32)
-        do = do_ref[0].astype(jnp.float32).reshape(rows, D)
+        q = q_ref[0].astype(sdt).reshape(rows, D)
+        k = k_ref[0].astype(sdt)
+        v = v_ref[0].astype(adt)
+        do = do_ref[0].astype(adt).reshape(rows, D)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         s = s + kbias_ref[0]
         s = _seg_mask(s, qs_ref[0], ks_ref[0], rep=rep, tq=tq)
         p = p_from_lse(s, lse_ref[0].reshape(rows, 1))
         # (0,)-axis contraction: the GQA group's dK/dV accumulate in-matmul
-        dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+        dv_scr[...] += jax.lax.dot_general(p.astype(adt), do,
+                                           (((0,), (0,)), ((), ())),
                                            preferred_element_type=jnp.float32)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         ds = p * (dp - delta_ref[0].reshape(rows, 1)) * scale
-        dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
-                                           preferred_element_type=jnp.float32)
+        dk_scr[...] += jax.lax.dot_general(
+            ds.astype(adt), q_ref[0].astype(adt).reshape(rows, D),
+            (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
 
     @pl.when(i == n_q - 1)
     def _finalize():
@@ -191,12 +194,13 @@ def _dkv_kernel(qrng, krng, q_ref, k_ref, v_ref, kbias_ref, qs_ref, ks_ref,
         dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
 
 
-def _fwd_call(q, k, v, key_bias, qseg, kseg, qrng, krng, *, tq, tk, interpret):
+def _fwd_call(q, k, v, key_bias, qseg, kseg, qrng, krng, *, tq, tk,
+              interpret, compute):
     BH, rep, N, D = q.shape
     L = k.shape[1]
     n_k = L // tk
     kern = functools.partial(_fwd_kernel, scale=1.0 / (D ** 0.5), n_k=n_k,
-                             tq=tq, tk=tk)
+                             tq=tq, tk=tk, compute=compute)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(BH, N // tq, n_k),
@@ -228,11 +232,11 @@ def _fwd_call(q, k, v, key_bias, qseg, kseg, qrng, krng, *, tq, tk, interpret):
 
 
 def _bwd_calls(q, k, v, key_bias, qseg, kseg, qrng, krng, do, lse, delta, *,
-               tq, tk, interpret):
+               tq, tk, interpret, compute):
     BH, rep, N, D = q.shape
     L = k.shape[1]
     n_q, n_k = N // tq, L // tk
-    kw = dict(scale=1.0 / (D ** 0.5), tq=tq, tk=tk)
+    kw = dict(scale=1.0 / (D ** 0.5), tq=tq, tk=tk, compute=compute)
 
     dq_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -289,8 +293,8 @@ def _bwd_calls(q, k, v, key_bias, qseg, kseg, qrng, krng, do, lse, delta, *,
 
 
 @functools.lru_cache(maxsize=None)
-def _make_vjp(tq: int, tk: int, interpret: bool):
-    kw = dict(tq=tq, tk=tk, interpret=interpret)
+def _make_vjp(tq: int, tk: int, interpret: bool, compute: str):
+    kw = dict(tq=tq, tk=tk, interpret=interpret, compute=compute)
 
     @jax.custom_vjp
     def attend(q, k, v, key_bias, qseg, kseg, qrng, krng):
@@ -311,11 +315,13 @@ def _make_vjp(tq: int, tk: int, interpret: bool):
     return attend
 
 
-@functools.partial(jax.jit, static_argnames=("tq", "tk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tq", "tk", "interpret",
+                                             "compute"))
 def flash_attention_varlen_kernel_call(q, k, v, key_bias, qseg, kseg,
                                        qrng, krng, *, tq: int = 256,
                                        tk: int = 256,
-                                       interpret: bool | None = None):
+                                       interpret: bool | None = None,
+                                       compute: str | None = None):
     """Packed-varlen flash attention over one concatenated sample axis.
 
     q: (Hkv, rep, T, D) grouped queries; k, v: (Hkv, L, D); key_bias: (1, L)
@@ -336,11 +342,13 @@ def flash_attention_varlen_kernel_call(q, k, v, key_bias, qseg, kseg,
                          " pads; direct callers must pass dividing tiles")
     if interpret is None:
         interpret = should_interpret()
+    if compute is None:
+        compute = resolve_compute_dtype(q.dtype)
     if interpret and BH > 1:
         # CPU fallback: per-KV-head grids keep the interpreter linear in Hkv.
         # Bias/seg/range operands are shared across heads — close over them
         # and map only q/k/v (they are also the only differentiable inputs).
-        f = _make_vjp(tq, tk, True)
+        f = _make_vjp(tq, tk, True, compute)
 
         def one_head(t):
             qh, kh, vh = t
@@ -348,5 +356,5 @@ def flash_attention_varlen_kernel_call(q, k, v, key_bias, qseg, kseg,
                      qrng, krng)[0]
 
         return jax.lax.map(one_head, (q, k, v))
-    return _make_vjp(tq, tk, interpret)(q, k, v, key_bias, qseg, kseg,
-                                        qrng, krng)
+    return _make_vjp(tq, tk, interpret, compute)(q, k, v, key_bias, qseg,
+                                                 kseg, qrng, krng)

@@ -225,6 +225,69 @@ def test_grads_finite_under_logit_blowup(kernel):
     _assert_grads_close(got, jax.grad(rfn, argnums=(0, 1, 2))(q, k, v))
 
 
+# ---------------------------------------------------------------------------
+# Tiered-tolerance dtype sweep: the precision contract (bf16 matmul operands,
+# fp32 accumulation) across every kernel, kernel-vs-oracle grads.  fp32 keeps
+# the strict 1e-3 tolerance; bf16 tolerances are widened PER KERNEL — bf16 has
+# ~3 decimal digits, and error compounds with the number of chained matmuls
+# (selection re-gathers, local merges two softmax halves).
+# ---------------------------------------------------------------------------
+
+_DTYPE_TOL = {
+    "float32": {k: dict(atol=1e-3, rtol=1e-3)
+                for k in ("ball", "local", "flash", "selection")},
+    "bfloat16": {"ball": dict(atol=4e-2, rtol=4e-2),
+                 "local": dict(atol=4e-2, rtol=4e-2),
+                 "flash": dict(atol=4e-2, rtol=4e-2),
+                 "selection": dict(atol=6e-2, rtol=6e-2)},
+}
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("kernel", ["ball", "local", "flash", "selection"])
+def test_grad_parity_dtype_sweep(kernel, dtype):
+    tol = _DTYPE_TOL[dtype][kernel]
+    B, N, Hkv, D = 1, 128, 2, 32
+    rep = 2
+    q, k, v, w = _qkvw(B, N, Hkv * rep, Hkv, D)
+    dt = jnp.dtype(dtype)
+    q, k, v = q.astype(dt), k.astype(dt), v.astype(dt)
+    mask = _mask(B, N, True)
+
+    if kernel == "ball":
+        kfn = lambda q, k, v: ops.ball_attention(q, k, v, mask, 32)
+        rfn = lambda q, k, v: ref.ball_attention_ref(
+            q, repeat_kv(k, rep), repeat_kv(v, rep), mask, 32)
+    elif kernel == "local":
+        kfn = lambda q, k, v: ops.local_window_attention(q, k, v, 32, mask)
+        rfn = lambda q, k, v: ref.local_window_attention_ref(
+            q, repeat_kv(k, rep), repeat_kv(v, rep), 32, mask)
+    elif kernel == "flash":
+        kfn = lambda q, k, v: ops.flash_attention(q, k, v, key_valid=mask)
+        rfn = lambda q, k, v: ref.flash_attention_ref(
+            q, repeat_kv(k, rep), repeat_kv(v, rep), key_valid=mask)
+    else:
+        ell, g, ks = 8, 8, 4
+        G, nb = N // g, N // ell
+        k1, k2 = jax.random.split(jax.random.fold_in(KEY, 21))
+        idx = jax.random.randint(k1, (B, G, Hkv, ks), 0, nb)
+        valid = jax.random.bernoulli(k2, 0.85, (B, G, Hkv, ks))
+        kfn = lambda q, k, v: ops.selection_attention(
+            q, k, v, idx, valid, mask, block_size=ell, group_size=g)
+        rfn = lambda q, k, v: ref.selection_attention_ref(
+            q, k, v, idx, valid, mask, block_size=ell, group_size=g)
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(fn(q, k, v).astype(jnp.float32)
+                                       * w)
+
+    got = jax.grad(loss(kfn), argnums=(0, 1, 2))(q, k, v)
+    want = jax.grad(loss(rfn), argnums=(0, 1, 2))(q, k, v)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(r, np.float32), **tol)
+
+
 def test_kernel_train_step_is_jittable():
     """A jitted fwd+bwd step on the kernel path compiles and yields finite grads."""
     B, N, Hq, Hkv, D, dm = 1, 128, 4, 2, 32, 64

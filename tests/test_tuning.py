@@ -113,6 +113,52 @@ def test_variant_isolates_cache_entries(monkeypatch):
     assert tuning.flash_variant(False, False, 1) == "plain"
 
 
+def test_compute_and_layout_isolate_cache_entries(monkeypatch):
+    """The guard for the precision contract + batch layouts: a tile tuned
+    under one compute dtype (bf16/fp8 operands) or one layout (packed
+    varlen vs padded) must NEVER be replayed for another — the cost profile
+    differs, so the cached winner is invalid there.  fp32/default compute
+    deliberately shares the pre-contract key (old entries stay valid)."""
+    monkeypatch.setenv(tuning.ENV_AUTOTUNE, "1")
+    kw = dict(n_q=300, n_k=300, d=32, dtype=jnp.float32, interpret=True)
+    tuning.get_tiles("flash",
+                     measure=lambda tq, tk: 1.0 if (tq, tk) != (64, 128) else 0.1,
+                     **kw)
+    # different compute dtype: fresh measurement, not the fp32 hit
+    got = tuning.get_tiles("flash", compute="bfloat16",
+                           measure=lambda tq, tk: 1.0 if (tq, tk) != (256, 256) else 0.1,
+                           **kw)
+    assert got == (256, 256)
+    # different layout: fresh measurement too
+    got = tuning.get_tiles("flash", layout="varlen",
+                           measure=lambda tq, tk: 1.0 if (tq, tk) != (128, 128) else 0.1,
+                           **kw)
+    assert got == (128, 128)
+    # fp8 compute isolated from bf16 AND fp32
+    got = tuning.get_tiles("flash", compute="float8_e4m3fn",
+                           measure=lambda tq, tk: 1.0 if (tq, tk) != (64, 256) else 0.1,
+                           **kw)
+    assert got == (64, 256)
+    # all four entries still resolve independently with no re-measurement
+    def boom(tq, tk):
+        raise AssertionError("cache hit must not re-measure")
+    assert tuning.get_tiles("flash", measure=boom, **kw) == (64, 128)
+    assert tuning.get_tiles("flash", compute="bfloat16", measure=boom,
+                            **kw) == (256, 256)
+    assert tuning.get_tiles("flash", layout="varlen", measure=boom,
+                            **kw) == (128, 128)
+    assert tuning.get_tiles("flash", compute="float8_e4m3fn", measure=boom,
+                            **kw) == (64, 256)
+    # compute="float32" IS the default key — pre-contract entries stay valid
+    assert tuning.get_tiles("flash", compute="float32", measure=boom,
+                            **kw) == (64, 128)
+    # the storage dtype is part of the key independently of compute
+    got = tuning.get_tiles("flash", n_q=300, n_k=300, d=32,
+                           dtype=jnp.bfloat16, interpret=True,
+                           measure=lambda tq, tk: 1.0 if (tq, tk) != (512, 512) else 0.1)
+    assert got == (512, 512)
+
+
 def test_kernel_call_rejects_non_dividing_tiles():
     from repro.kernels.flash import flash_attention_kernel_call
     q = jnp.zeros((1, 1, 300, 16))
