@@ -364,6 +364,102 @@ def time_kernel_train_step(args) -> None:
               f"({pps:.0f} vs {pps_seq:.0f})", flush=True)
 
 
+def time_serve_benchmark(args) -> None:
+    """§Serving throughput: lockstep batches vs continuous batching over the
+    paged KV cache, on the SAME ragged request mix (half short, half long
+    prompts — the regime where a rectangular batch wastes the most steps).
+
+    Lockstep is the pre-paged engine: requests are grouped into rectangles
+    of ``--slots``, each padded to its batch-max prompt length, and a batch
+    only finishes when every slot has its ``--tokens`` generations.
+    Continuous batching (``ServingEngine(paged=True).serve``) retires slots
+    independently and admits queued requests mid-flight, so useful
+    tokens/sec is the honest comparison: the SAME R·tokens generations
+    divided by each mode's wall time.  Smoke-scale model on CPU — compare
+    runs on similar hosts only.
+
+      PYTHONPATH=src python -m benchmarks.perf_iter --serve \
+          --slots 4 --requests 8 --tokens 16 --max-len 256
+    """
+    import time as _time
+
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.configs.reduce import smoke_config
+    from repro.models.api import model_api
+    from repro.serving import ServingEngine
+
+    mcfg = smoke_config(get_config(args.arch or "tinyllama-1.1b"))
+    if args.backend:
+        mcfg = mcfg.scaled(bsa=dataclasses.replace(mcfg.bsa,
+                                                   backend=args.backend))
+    api = model_api(mcfg)
+    params = api.init(jax.random.PRNGKey(0))
+    B, R, NEW, S = args.slots, args.requests, args.tokens, args.max_len
+    rng = np.random.default_rng(0)
+    lens = np.where(np.arange(R) % 2 == 0,
+                    rng.integers(16, 33, R),
+                    rng.integers(S // 2, S - NEW, R))
+    prompts = [rng.integers(0, mcfg.vocab_size, int(n), dtype=np.int32)
+               for n in lens]
+    useful = R * NEW
+
+    def run_lockstep(eng):
+        for s in range(0, R, B):
+            chunk = prompts[s:s + B]
+            chunk = chunk + [chunk[-1]] * (B - len(chunk))   # dummy tail slots
+            rect = np.zeros((B, max(len(p) for p in chunk)), np.int32)
+            for i, p in enumerate(chunk):
+                rect[i, :len(p)] = p       # zero-padded: cost model only —
+            eng.reset()                    # lockstep CAN'T serve ragged rows
+            eng.generate(rect, NEW)
+
+    lock = ServingEngine(api, params, batch_slots=B, max_len=S)
+    run_lockstep(lock)                                       # jit warmup
+    t0 = _time.perf_counter()
+    run_lockstep(lock)
+    t_lock = _time.perf_counter() - t0
+
+    paged = ServingEngine(api, params, batch_slots=B, max_len=S, paged=True)
+    paged.serve(prompts, max_new_tokens=NEW)                 # jit warmup
+    paged.reset()
+    t0 = _time.perf_counter()
+    paged.serve(prompts, max_new_tokens=NEW)
+    t_paged = _time.perf_counter() - t0
+    steps_paged = paged.serve_steps // 2                     # two equal runs
+
+    tps_lock = useful / t_lock
+    tps_paged = useful / t_paged
+    from benchmarks.common import emit
+    emit(f"perf_iter/serve_lockstep_b{B}_r{R}", t_lock * 1e6 / useful,
+         f"tokens_per_sec={tps_lock:.1f}")
+    emit(f"perf_iter/serve_paged_b{B}_r{R}", t_paged * 1e6 / useful,
+         f"tokens_per_sec={tps_paged:.1f};steps={steps_paged};"
+         f"page={paged.page}")
+    print(f"# continuous vs lockstep: {tps_paged / tps_lock:.2f}x useful "
+          f"tokens/sec ({tps_paged:.0f} vs {tps_lock:.0f}) on "
+          f"{R} requests, prompt lens {lens.min()}..{lens.max()}", flush=True)
+
+    record = {
+        "serving": True,
+        "shape": {"slots": B, "requests": R, "new_tokens": NEW, "max_len": S,
+                  "prompt_lens": [int(n) for n in lens]},
+        "page": paged.page,
+        "lockstep": {"tokens_per_sec": round(tps_lock, 1),
+                     "wall_s": round(t_lock, 3)},
+        "paged": {"tokens_per_sec": round(tps_paged, 1),
+                  "wall_s": round(t_paged, 3), "steps": steps_paged},
+        "tokens_per_sec": round(tps_paged, 1),
+        "speedup_vs_lockstep": round(tps_paged / tps_lock, 2),
+    }
+    if args.bench_json:
+        Path(args.bench_json).write_text(json.dumps(record, indent=1) + "\n")
+        print(f"# wrote {args.bench_json}", flush=True)
+    if args.baseline:
+        _check_regression(record, args.baseline, args.max_regression)
+
+
 def _check_regression(record: dict, baseline_path: str, max_regression: float):
     """CI gate: fail when throughput regressed > max_regression vs the
     committed baseline record.  Ragged records compare against the
@@ -377,6 +473,26 @@ def _check_regression(record: dict, baseline_path: str, max_regression: float):
               flush=True)
         return
     base = json.loads(p.read_text())
+    if record.get("serving"):
+        # gate on the paged/lockstep RATIO, not absolute tok/s: both modes
+        # run on the same host in the same invocation, so the ratio is
+        # invariant to runner speed while absolute wall-clock is not
+        base_spd = base.get("serving_paged", {}).get("after", {}) \
+                       .get("speedup_vs_lockstep")
+        if not base_spd:
+            print("# baseline has no serving_paged.after.speedup_vs_lockstep"
+                  " — regression gate skipped", flush=True)
+            return
+        spd = record["speedup_vs_lockstep"]
+        ratio = spd / base_spd
+        print(f"# serving speedup vs baseline: {ratio:.2f}x "
+              f"({spd:.2f}x vs {base_spd:.2f}x over lockstep)", flush=True)
+        if ratio < 1.0 - max_regression:
+            raise SystemExit(
+                f"serving throughput regression: {spd:.2f}x over lockstep is "
+                f"{(1 - ratio) * 100:.0f}% below baseline {base_spd:.2f}x "
+                f"(allowed: {max_regression * 100:.0f}%)")
+        return
     if record["shape"].get("ragged") and "ragged_varlen" in base:
         base = base["ragged_varlen"].get("packed", {})
     elif (record.get("score_dtype") == "bfloat16"
@@ -451,11 +567,22 @@ def main():
     ap.add_argument("--heads", type=int, default=4)
     ap.add_argument("--kv-heads", type=int, default=2)
     ap.add_argument("--head-dim", type=int, default=32)
+    ap.add_argument("--serve", action="store_true",
+                    help="time lockstep batches vs paged continuous batching "
+                         "on a ragged request mix (useful tokens/sec; "
+                         "--bench-json/--baseline gate the paged number)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
     args = ap.parse_args()
 
     if args.autotune:
         # must be set before the first attention trace resolves tiles
         os.environ["REPRO_AUTOTUNE"] = "1"
+    if args.serve:
+        time_serve_benchmark(args)
+        return
     if args.kernel_step:
         time_kernel_train_step(args)
         return

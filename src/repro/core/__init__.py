@@ -59,6 +59,8 @@ from repro.core.nsa_causal import (  # noqa: F401
     nsa_causal_attention,
     init_decode_cache,
     nsa_causal_decode,
+    init_paged_decode_cache,
+    nsa_causal_decode_paged,
 )
 from repro.core.full_attention import full_attention  # noqa: F401
 from repro.core.erwin import erwin_attention  # noqa: F401

@@ -111,6 +111,7 @@ __all__ = [
     "resolve_branch_backends",
     "get_combine",
     "get_varlen",
+    "get_paged_gather",
     "accepts_kwarg",
 ]
 
@@ -235,6 +236,11 @@ class JnpBackend:
         from repro.core.branches import gated_combine_ref
         return gated_combine_ref(outs, gates, mask)
 
+    def paged_gather(self, pool, rows):
+        # reference semantics for the paged-decode row gather: plain
+        # advanced indexing (XLA lowers it to one dynamic-gather)
+        return pool[rows]
+
     # -- packed-varlen (offsets-based) entry points: q (T,Hq,D); k/v (L,Hkv,D).
     # These ARE the parity oracle for kernel backends' varlen paths: segment
     # isolation is expressed as explicit logit bias on the reference math.
@@ -332,6 +338,10 @@ class PallasBackend:
     def gated_combine(self, outs, gates, mask):
         from repro.kernels import ops as kops
         return kops.gated_combine(outs, gates, mask, interpret=self.interpret)
+
+    def paged_gather(self, pool, rows):
+        from repro.kernels import ops as kops
+        return kops.paged_gather(pool, rows, interpret=self.interpret)
 
     # -- packed-varlen entry points (``kernels/ops.py`` wrappers; the flash
     # one runs the dedicated segment-masked tile-skipping varlen kernel) --
@@ -511,6 +521,21 @@ def accepts_kwarg(fn, name: str) -> bool:
     if p is not None:
         return p.kind in (p.KEYWORD_ONLY, p.POSITIONAL_OR_KEYWORD)
     return any(pp.kind == pp.VAR_KEYWORD for pp in sig.parameters.values())
+
+
+def get_paged_gather(backend: Backend):
+    """The backend's paged-cache row gather, or the jnp reference if absent.
+
+    ``paged_gather(pool (R, Hkv, D), rows (B, L) int32) → (B, L, Hkv, D)``
+    is the hot fetch of the paged decode path (``nsa_causal_decode_paged``):
+    block-table-resolved pool rows pulled for the local window and the
+    compressed branches.  An OPTIONAL protocol extension — plug-ins without
+    it fall back to plain advanced indexing with identical semantics.
+    """
+    fn = getattr(backend, "paged_gather", None)
+    if callable(fn):
+        return fn
+    return get_backend("jnp").paged_gather
 
 
 def get_varlen(backend: Backend, op: str):

@@ -29,7 +29,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.backend import accepts_kwarg, get_combine, resolve_branch_backends
+from repro.core.backend import (
+    accepts_kwarg,
+    get_combine,
+    get_paged_gather,
+    resolve_branch_backends,
+)
 from repro.core.branches import (
     NEG_INF,
     block_validity,
@@ -50,6 +55,8 @@ __all__ = [
     "nsa_causal_attention",
     "init_decode_cache",
     "nsa_causal_decode",
+    "init_paged_decode_cache",
+    "nsa_causal_decode_paged",
     "local_window_attention_ref",
 ]
 
@@ -258,95 +265,148 @@ def init_decode_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
     }
 
 
-def nsa_causal_decode(params, q1, k1, v1, cache: dict, *, cfg: BSAConfig,
-                      x1: jnp.ndarray | None = None):
-    """One decode step.
+def init_paged_decode_cache(num_blocks: int, page: int, n_kv_heads: int,
+                            head_dim: int, cfg: BSAConfig,
+                            dtype=jnp.bfloat16) -> dict:
+    """Paged decode cache: flat KV POOLS shared by every slot.
 
-    q1: (B,1,Hq,D); k1,v1: (B,1,Hkv,D) for the NEW token at position
-    ``cache['length']``.  Returns (out (B,1,Hq,D), new_cache).
-    Cost per token: O(w) local + O(S/ℓ) compression + O(k*·ℓ) selection.
+    ``num_blocks`` pool blocks of ``page`` tokens each, PLUS one TRASH block
+    (id ``num_blocks``) that absorbs writes from inactive slots and reads
+    through unallocated block-table entries — so the jitted step needs no
+    data-dependent shapes.  ``page`` must be a multiple of both the local
+    window w (the 2w window then never crosses into an unallocated page)
+    and the compression block ℓ (a φ-block never straddles pages; block j's
+    compressed row lives in the SAME pool block as its tokens, which is what
+    lets prefix-cached pages carry their compressed state for free).
+    """
+    w = cfg.effective_local_window
+    ell = cfg.cmp_block
+    if page % w or page % ell:
+        raise ValueError(f"page={page} must be a multiple of the local window "
+                         f"{w} and of cmp_block {ell}")
+    R = (num_blocks + 1) * page
+    Rc = (num_blocks + 1) * (page // ell)
+    return {
+        "k": jnp.zeros((R, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((R, n_kv_heads, head_dim), dtype),
+        "k_cmp": jnp.zeros((Rc, n_kv_heads, head_dim), dtype),
+        "v_cmp": jnp.zeros((Rc, n_kv_heads, head_dim), dtype),
+    }
+
+
+def nsa_causal_decode_paged(params, q1, k1, v1, cache: dict,
+                            table: jnp.ndarray, lengths: jnp.ndarray, *,
+                            cfg: BSAConfig, page: int,
+                            x1: jnp.ndarray | None = None):
+    """One decode step over PAGED per-slot caches.
+
+    q1: (B,1,Hq,D); k1,v1: (B,1,Hkv,D) for slot b's NEW token at position
+    ``lengths[b]``.  ``cache`` holds flat pools (init_paged_decode_cache);
+    ``table``: (B, n_pages) int32 block table mapping slot-local pages to
+    pool blocks (unallocated / retired entries point at the trash block);
+    ``lengths``: (B,) int32 per-slot token counts.  ``page`` is static.
+
+    Correctness leans on the host allocator's contract: the page containing
+    position ``lengths[b]`` is EXCLUSIVELY owned by slot b (refcount 1 —
+    copy-on-write happens host-side before the step), so the token scatter
+    and the conditional compressed-row read-modify-write never collide
+    across slots; inactive slots' tables are all-trash, so their writes land
+    in the trash block (collisions there are harmless).
+
+    Returns (out (B,1,Hq,D), new_cache) — lengths are NOT advanced here;
+    the host controller owns them.
     """
     B, _, Hq, D = q1.shape
     Hkv = k1.shape[2]
     rep = Hq // Hkv
     ell = cfg.cmp_block
     w = cfg.effective_local_window
-    t = cache["length"]                                             # position of new token
-    S_max = cache["k"].shape[1]
-    nb_max = S_max // ell
+    n_pages = table.shape[1]
+    cpp = page // ell                         # compressed rows per page
+    nb_max = n_pages * cpp
+    capacity = n_pages * page
+    if capacity < 2 * w:
+        raise ValueError(f"slot capacity {capacity} < 2×local window {w}")
+    t = lengths                               # (B,) position of each new token
+    gather = get_paged_gather(resolve_branch_backends(cfg)["cmp"])
 
-    # --- cache update (token level) ---
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype),
-                                           (0, t, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype),
-                                           (0, t, 0, 0))
+    def row_of(pos):
+        # (B, L) token positions → (B, L) token-pool rows via the table
+        blk = jnp.take_along_axis(table, pos // page, axis=1)
+        return blk * page + pos % page
 
-    # --- compressed cache update: when the new token completes a block ---
+    def crow_of(blk_idx):
+        # (B, L) φ-block indices → (B, L) compressed-pool rows
+        blk = jnp.take_along_axis(table, blk_idx // cpp, axis=1)
+        return blk * cpp + blk_idx % cpp
+
+    # --- cache update (token level): scatter each slot's new token ---
+    wrow = row_of(t[:, None])[:, 0]                                 # (B,)
+    k_pool = cache["k"].at[wrow].set(k1[:, 0].astype(cache["k"].dtype))
+    v_pool = cache["v"].at[wrow].set(v1[:, 0].astype(cache["v"].dtype))
+
+    # --- compressed update: slots whose new token completes a φ-block ---
     blk_id = t // ell
-    blk_start = blk_id * ell
-    complete = (t + 1) % ell == 0
-    last_block_k = jax.lax.dynamic_slice(
-        k_cache, (0, blk_start, 0, 0), (B, ell, Hkv, D))
-    last_block_v = jax.lax.dynamic_slice(
-        v_cache, (0, blk_start, 0, 0), (B, ell, Hkv, D))
-    new_kc = phi_apply(params["phi_k"], last_block_k, None, cfg)    # (B,1,Hkv,D)
-    new_vc = phi_apply(params["phi_v"], last_block_v, None, cfg)
-    k_cmp = jnp.where(
-        complete,
-        jax.lax.dynamic_update_slice(cache["k_cmp"], new_kc.astype(cache["k_cmp"].dtype),
-                                     (0, blk_id, 0, 0)),
-        cache["k_cmp"])
-    v_cmp = jnp.where(
-        complete,
-        jax.lax.dynamic_update_slice(cache["v_cmp"], new_vc.astype(cache["v_cmp"].dtype),
-                                     (0, blk_id, 0, 0)),
-        cache["v_cmp"])
+    complete = (t + 1) % ell == 0                                   # (B,)
+    brows = row_of(blk_id[:, None] * ell + jnp.arange(ell)[None, :])  # (B,ell)
+    new_kc = phi_apply(params["phi_k"], k_pool[brows], None, cfg)   # (B,1,Hkv,D)
+    new_vc = phi_apply(params["phi_v"], v_pool[brows], None, cfg)
+    crow = crow_of(blk_id[:, None])[:, 0]                           # (B,)
+    # read-modify-write keeps non-completing slots' rows unchanged without
+    # a per-slot conditional scatter (their row is exclusively owned)
+    sel = complete[:, None, None]
+    kc_val = jnp.where(sel, new_kc[:, 0].astype(cache["k_cmp"].dtype),
+                       cache["k_cmp"][crow])
+    vc_val = jnp.where(sel, new_vc[:, 0].astype(cache["v_cmp"].dtype),
+                       cache["v_cmp"][crow])
+    k_cmp = cache["k_cmp"].at[crow].set(kc_val)
+    v_cmp = cache["v_cmp"].at[crow].set(vc_val)
 
-    # --- local branch: mirror the train-time BLOCKED window exactly ---
-    # token t lives in block b = t//w and attends to block b (causal) plus
-    # block b-1 (full) ⇒ the attendable range is [max(b-1,0)·w, t].
-    blk_lw = t // w
-    start = jnp.maximum(blk_lw - 1, 0) * w
-    k_win = jax.lax.dynamic_slice(k_cache, (0, start, 0, 0), (B, 2 * w, Hkv, D))
-    v_win = jax.lax.dynamic_slice(v_cache, (0, start, 0, 0), (B, 2 * w, Hkv, D))
-    pos = start + jnp.arange(2 * w)
-    win_valid = pos <= t                                            # (2w,)
+    # --- local branch: per-slot blocked window [max(t//w-1,0)·w, t] ---
+    start = jnp.maximum(t // w - 1, 0) * w                          # (B,)
+    pos = start[:, None] + jnp.arange(2 * w)[None, :]               # (B,2w)
+    win_valid = pos <= t[:, None]
+    # invalid positions still index allocated-or-trash pages (w | page), so
+    # the gather is safe; the bias kills their contribution
+    k_win = gather(k_pool, row_of(pos))                             # (B,2w,Hkv,D)
+    v_win = gather(v_pool, row_of(pos))
     qh = q1.transpose(0, 2, 1, 3)                                   # (B,Hq,1,D)
     out_local = sdpa(qh, repeat_kv(k_win, rep).transpose(0, 2, 1, 3),
                      repeat_kv(v_win, rep).transpose(0, 2, 1, 3),
-                     mask_to_bias(win_valid[None, None, None, :]))
+                     mask_to_bias(win_valid[:, None, None, :]))
 
     # --- compression branch: all complete blocks strictly before t ---
-    n_complete = (t + 1) // ell                                     # after this token
-    blk_ok = jnp.arange(nb_max) < jnp.where(complete, n_complete - 1,
-                                            n_complete)             # strictly past
-    # blocks that end exactly at t are excluded (strictly before t);
-    # `complete` means block blk_id ends AT t → not yet attendable by t itself.
-    out_cmp = sdpa(qh, repeat_kv(k_cmp, rep).transpose(0, 2, 1, 3),
-                   repeat_kv(v_cmp, rep).transpose(0, 2, 1, 3),
-                   mask_to_bias(blk_ok[None, None, None, :]))
+    n_complete = (t + 1) // ell
+    # blocks ending exactly AT t are excluded (strictly before t)
+    blk_ok = jnp.arange(nb_max)[None, :] < jnp.where(
+        complete, n_complete - 1, n_complete)[:, None]              # (B,NB)
+    call = crow_of(jnp.broadcast_to(jnp.arange(nb_max)[None, :], (B, nb_max)))
+    kc_all = gather(k_cmp, call)                                    # (B,NB,Hkv,D)
+    vc_all = gather(v_cmp, call)
+    out_cmp = sdpa(qh, repeat_kv(kc_all, rep).transpose(0, 2, 1, 3),
+                   repeat_kv(vc_all, rep).transpose(0, 2, 1, 3),
+                   mask_to_bias(blk_ok[:, None, None, :]))
 
     # --- selection branch ---
     qg = q1.reshape(B, 1, Hkv, rep, D)
     s = jnp.einsum("bmkrd,bnkd->bkn", qg.astype(jnp.float32),
-                   k_cmp.astype(jnp.float32),
+                   kc_all.astype(jnp.float32),
                    preferred_element_type=jnp.float32) / (D ** 0.5)  # (B,Hkv,NB)
-    s = jnp.where(blk_ok[None, None, :], s, NEG_INF)
+    s = jnp.where(blk_ok[:, None, :], s, NEG_INF)
     if cfg.force_first_block:
-        s = s.at[..., 0].add(jnp.where(blk_ok[0], -NEG_INF, 0.0))
+        s = s.at[..., 0].add(jnp.where(blk_ok[:, 0], -NEG_INF, 0.0)[:, None])
     k_star = min(cfg.top_k, nb_max)
     top_vals, top_idx = jax.lax.top_k(s, k_star)                    # (B,Hkv,k*)
     sel_valid = top_vals > NEG_INF / 2
-    # batched take_along_axis with (B, Hkv) as batch dims — keeps sharded
-    # head (or sequence) cache axes local under GSPMD (see branches.py)
     L = k_star * ell
     ig = jnp.where(sel_valid, top_idx, 0)
-    kbh = k_cache.reshape(B, nb_max, ell, Hkv, D).transpose(0, 3, 1, 2, 4)
-    vbh = v_cache.reshape(B, nb_max, ell, Hkv, D).transpose(0, 3, 1, 2, 4)
-    kg = jnp.take_along_axis(kbh.reshape(B, Hkv, nb_max, ell * D),
-                             ig[..., None], axis=2).reshape(B, Hkv, L, D)
-    vg = jnp.take_along_axis(vbh.reshape(B, Hkv, nb_max, ell * D),
-                             ig[..., None], axis=2).reshape(B, Hkv, L, D)
+    # per-head block choices → per-head token rows; the trailing head index
+    # keeps the gather at k*·ℓ rows per (slot, head) instead of Hkv× that
+    sel_pos = ig[..., None] * ell + jnp.arange(ell)                 # (B,Hkv,k*,ell)
+    srows = row_of(sel_pos.reshape(B, Hkv * L)).reshape(B, Hkv, k_star, ell)
+    head_idx = jnp.arange(Hkv)[None, :, None, None]
+    kg = k_pool[srows, head_idx].reshape(B, Hkv, L, D)
+    vg = v_pool[srows, head_idx].reshape(B, Hkv, L, D)
     key_valid = jnp.broadcast_to(sel_valid[..., None],
                                  (B, Hkv, k_star, ell)).reshape(B, Hkv, 1, L)
     qh2 = q1.reshape(B, 1, Hkv, rep, D).transpose(0, 2, 3, 1, 4).reshape(B, Hkv, rep, D)
@@ -368,6 +428,44 @@ def nsa_causal_decode(params, q1, k1, v1, cache: dict, *, cfg: BSAConfig,
            + gt["slc"] * out_slc.astype(jnp.float32))
     out = out.transpose(0, 2, 1, 3).astype(q1.dtype)                # (B,1,Hq,D)
 
-    new_cache = {"k": k_cache, "v": v_cache, "k_cmp": k_cmp, "v_cmp": v_cmp,
-                 "length": t + 1}
+    new_cache = {"k": k_pool, "v": v_pool, "k_cmp": k_cmp, "v_cmp": v_cmp}
+    return out, new_cache
+
+
+def nsa_causal_decode(params, q1, k1, v1, cache: dict, *, cfg: BSAConfig,
+                      x1: jnp.ndarray | None = None):
+    """One decode step (dense cache — the lockstep layout).
+
+    q1: (B,1,Hq,D); k1,v1: (B,1,Hkv,D) for the NEW token at position
+    ``cache['length']``.  Returns (out (B,1,Hq,D), new_cache).
+    Cost per token: O(w) local + O(S/ℓ) compression + O(k*·ℓ) selection.
+
+    The dense (B, max_len, ·) cache is addressed as a degenerate paged
+    layout — one page of ``max_len`` tokens per slot, identity block table,
+    one shared length — so lockstep and continuous-batching decode share one
+    numeric core (``nsa_causal_decode_paged``) and the decode-parity tests
+    pin both at once.
+    """
+    B = q1.shape[0]
+    S_max = cache["k"].shape[1]
+    Hkv, D = cache["k"].shape[2], cache["k"].shape[3]
+    nb = cache["k_cmp"].shape[1]
+    t = cache["length"]
+    pools = {
+        "k": cache["k"].reshape(B * S_max, Hkv, D),
+        "v": cache["v"].reshape(B * S_max, Hkv, D),
+        "k_cmp": cache["k_cmp"].reshape(B * nb, Hkv, D),
+        "v_cmp": cache["v_cmp"].reshape(B * nb, Hkv, D),
+    }
+    table = jnp.arange(B, dtype=jnp.int32)[:, None]        # slot b ↔ block b
+    lengths = jnp.broadcast_to(t, (B,))
+    out, pools = nsa_causal_decode_paged(params, q1, k1, v1, pools, table,
+                                         lengths, cfg=cfg, page=S_max, x1=x1)
+    new_cache = {
+        "k": pools["k"].reshape(B, S_max, Hkv, D),
+        "v": pools["v"].reshape(B, S_max, Hkv, D),
+        "k_cmp": pools["k_cmp"].reshape(B, nb, Hkv, D),
+        "v_cmp": pools["v_cmp"].reshape(B, nb, Hkv, D),
+        "length": t + 1,
+    }
     return out, new_cache

@@ -416,6 +416,32 @@ def selection_attention_varlen(q, k, v, top_idx, sel_valid, offsets, mask, *,
         block_size=block_size, group_size=group_size, interpret=interpret)[0]
 
 
+def paged_gather(pool, rows, *, interpret: bool | None = None,
+                 force_kernel: bool = False):
+    """Gather pool rows for the paged decode path.
+
+    ``pool``: (R, Hkv, D) flat KV pool; ``rows``: int32 of any shape holding
+    pool-row indices.  Returns ``rows.shape + (Hkv, D)``.
+
+    Compiled TPU runs use the scalar-prefetch row-DMA kernel
+    (``kernels/paged.py``).  Interpret mode falls back to plain advanced
+    indexing UNLESS ``force_kernel``: the kernel is one grid cell per row,
+    which Mosaic pipelines on hardware but the interpreter executes as
+    O(rows) Python per decode step — the fallback keeps the interpret CI leg
+    linear (same reasoning as ``common.interpret_batch_map``), and the
+    forced path lets parity tests still execute the kernel body.
+    """
+    if interpret is None:
+        from repro.kernels.common import should_interpret
+        interpret = should_interpret()
+    if interpret and not force_kernel:
+        return pool[rows]
+    from repro.kernels.paged import paged_gather_kernel_call
+    flat = paged_gather_kernel_call(pool, rows.reshape(-1).astype(jnp.int32),
+                                    interpret=interpret)
+    return flat.reshape(*rows.shape, *pool.shape[1:])
+
+
 def gated_combine(outs, gates, mask, *, interpret: bool | None = None):
     """Fused gate-and-mask epilogue over the three branch outputs.
 

@@ -51,3 +51,57 @@ def make_serve_step(api, *, greedy: bool = True):
         return nxt, logits, caches
 
     return serve_step
+
+
+def make_paged_serve_step(api, *, page: int):
+    """The continuous-batching decode step (block-table addressing).
+
+    (params, caches, token (B,), table (B, n_pages) int32, lengths (B,
+    int32)) → (next_token (B,), logits (B, V), caches).  ``page`` is static
+    (baked into the jit); the tiny table/lengths arrays are pushed from the
+    host scheduler each call, so ONE compiled step serves every admission /
+    retirement configuration."""
+
+    def paged_serve_step(params, caches, token, table, lengths):
+        logits, caches = api.paged_decode_step(params, token, caches, table,
+                                               lengths, page)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, caches
+
+    return paged_serve_step
+
+
+def make_paged_serve_window(api, *, page: int):
+    """W greedy continuous-batching steps in ONE compiled call (lax.scan).
+
+    Between host scheduling events (admission, retirement) a greedy
+    schedule is VALUE-independent, so the engine batches W decode steps per
+    dispatch instead of paying host round-trip latency per token.  Per-step
+    feeds are data: ``feed (W, B)`` holds prompt tokens and ``use_prev
+    (W, B)`` flips a slot to self-feeding (its previous sample) once its
+    prompt is exhausted — the prefill→decode transition happens mid-window
+    with no host involvement.  ``occ (B,) int32`` advances only occupied
+    slots' lengths; W is baked into the compiled shape (the engine
+    quantizes it to powers of two so at most log₂(W_max)+1 variants ever
+    compile).
+
+    (params, caches, feed (W, B) int32, use_prev (W, B) bool, prev (B,)
+    int32, table (B, n_pages) int32, lengths (B,) int32, occ (B,) int32)
+    → (samples (W, B) int32, caches)."""
+
+    def paged_serve_window(params, caches, feed, use_prev, prev, table,
+                           lengths, occ):
+        def body(carry, xs):
+            caches, prev, lengths = carry
+            feed_t, use_t = xs
+            tok = jnp.where(use_t, prev, feed_t)
+            logits, caches = api.paged_decode_step(params, tok, caches,
+                                                   table, lengths, page)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (caches, nxt, lengths + occ), nxt
+
+        (caches, _, _), samples = jax.lax.scan(
+            body, (caches, prev, lengths), (feed, use_prev))
+        return samples, caches
+
+    return paged_serve_window

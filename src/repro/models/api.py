@@ -38,10 +38,21 @@ class ModelAPI:
     cache_init: Callable | None = None
     cache_specs: Callable | None = None
     decode_step: Callable | None = None
+    # paged continuous-batching decode (LM families; serving/paged_cache.py
+    # owns the host-side tables these consume)
+    paged_cache_init: Callable | None = None
+    paged_decode_step: Callable | None = None
+    cache_reset_slot: Callable | None = None
+    cache_copy_block: Callable | None = None
+    has_recurrent_state: bool = False
 
     @property
     def has_decoder(self) -> bool:
         return self.decode_step is not None
+
+    @property
+    def has_paged_decoder(self) -> bool:
+        return self.paged_decode_step is not None
 
 
 def _lm_api(mcfg) -> ModelAPI:
@@ -69,6 +80,16 @@ def _lm_api(mcfg) -> ModelAPI:
         cache_init=cache_init,
         cache_specs=cache_specs,
         decode_step=lambda p, tok, c: _tf.lm_decode_step(p, tok, c, mcfg=mcfg),
+        paged_cache_init=lambda B, num_blocks, page, dtype=jnp.bfloat16:
+            _tf.lm_paged_cache_init(mcfg, B, num_blocks, page, dtype),
+        paged_decode_step=lambda p, tok, c, table, lengths, page:
+            _tf.lm_paged_decode_step(p, tok, c, table, lengths, mcfg=mcfg,
+                                     page=page),
+        cache_reset_slot=lambda c, slot: _tf.lm_paged_cache_reset_slot(
+            mcfg, c, slot),
+        cache_copy_block=lambda c, src, dst, page: _tf.lm_paged_cache_copy_block(
+            mcfg, c, src, dst, page=page),
+        has_recurrent_state=_tf.lm_has_recurrent_state(mcfg),
     )
 
 

@@ -21,8 +21,10 @@ from repro.core import (
     erwin_attention,
     full_attention,
     init_decode_cache,
+    init_paged_decode_cache,
     nsa_causal_attention,
     nsa_causal_decode,
+    nsa_causal_decode_paged,
 )
 from repro.core.branches import repeat_kv, sdpa, mask_to_bias
 from repro.layers.nn import dense, dense_init
@@ -134,6 +136,62 @@ def attention_cache_init(mcfg, batch: int, max_len: int, dtype) -> dict:
         "v": jnp.zeros((batch, max_len, mcfg.n_kv_heads, hd), dtype),
         "length": jnp.zeros((), jnp.int32),
     }
+
+
+def attention_paged_cache_init(mcfg, num_blocks: int, page: int, dtype) -> dict:
+    """Flat paged KV pools for one attention layer (+1 trash block).
+
+    BSA layers carry token + φ-compressed pools (``init_paged_decode_cache``);
+    full attention carries token pools only.  Block ids are SHARED across
+    layers: every layer's pool has the same block layout, so one host-side
+    block table serves the whole stack."""
+    hd = mcfg.resolved_head_dim
+    if mcfg.attention == "bsa":
+        return init_paged_decode_cache(num_blocks, page, mcfg.n_kv_heads, hd,
+                                       mcfg.bsa, dtype=dtype)
+    R = (num_blocks + 1) * page
+    return {
+        "k": jnp.zeros((R, mcfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((R, mcfg.n_kv_heads, hd), dtype),
+    }
+
+
+def attention_layer_decode_paged(p, x1, cache, table, lengths, *, mcfg,
+                                 page: int, rope: bool = True):
+    """One-token decode against paged pools with PER-SLOT lengths.
+
+    x1: (B, 1, d); ``table`` (B, n_pages) int32 block table; ``lengths``
+    (B,) int32 per-slot positions (RoPE rotates each slot's query/key by its
+    OWN position — the per-slot generalisation of the lockstep scalar).
+    """
+    B = x1.shape[0]
+    pos = lengths[:, None].astype(jnp.int32)                         # (B,1)
+    q, k, v = _project(p, x1, mcfg, pos if rope else None, rope)
+    if mcfg.attention == "bsa":
+        out, cache = nsa_causal_decode_paged(p["bsa"], q, k, v, cache, table,
+                                             lengths, cfg=mcfg.bsa, page=page,
+                                             x1=x1)
+    else:
+        n_pages = table.shape[1]
+        capacity = n_pages * page
+        wblk = jnp.take_along_axis(table, (lengths // page)[:, None], axis=1)
+        wrow = wblk[:, 0] * page + lengths % page                    # (B,)
+        kc = cache["k"].at[wrow].set(k[:, 0].astype(cache["k"].dtype))
+        vc = cache["v"].at[wrow].set(v[:, 0].astype(cache["v"].dtype))
+        apos = jnp.broadcast_to(jnp.arange(capacity)[None], (B, capacity))
+        blk = jnp.take_along_axis(table, apos // page, axis=1)
+        rows = blk * page + apos % page                              # (B,cap)
+        k_all = kc[rows]                                             # (B,cap,Hkv,D)
+        v_all = vc[rows]
+        valid = apos <= lengths[:, None]
+        rep = mcfg.n_heads // mcfg.n_kv_heads
+        out = sdpa(q.transpose(0, 2, 1, 3),
+                   repeat_kv(k_all.astype(q.dtype), rep).transpose(0, 2, 1, 3),
+                   repeat_kv(v_all.astype(q.dtype), rep).transpose(0, 2, 1, 3),
+                   mask_to_bias(valid[:, None, None, :])).transpose(0, 2, 1, 3)
+        cache = {"k": kc, "v": vc}
+    out = out.reshape(B, 1, mcfg.n_heads * mcfg.resolved_head_dim)
+    return dense(p["wo"], out), cache
 
 
 def attention_layer_decode(p, x1, cache, *, mcfg, rope: bool = True):

@@ -25,7 +25,9 @@ from repro.models.attention_layer import (
     attention_cache_init,
     attention_layer_apply,
     attention_layer_decode,
+    attention_layer_decode_paged,
     attention_layer_init,
+    attention_paged_cache_init,
 )
 from repro.models.mamba2 import (
     mamba2_apply,
@@ -245,6 +247,116 @@ def lm_decode_step(params, token, caches, *, mcfg):
     else:
         logits = dense(params["lm_head"], x1)
     return logits[:, 0].astype(jnp.float32), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Paged decode (continuous batching — serving/paged_cache.py owns the tables)
+# ---------------------------------------------------------------------------
+
+def lm_paged_cache_init(mcfg, batch: int, num_blocks: int, page: int,
+                        dtype=jnp.bfloat16):
+    """Per-period caches with PAGED attention pools.
+
+    Attention layers get flat block pools (shared across slots through one
+    host-side block table — the same block ids index every layer's pool);
+    mamba layers keep per-slot recurrent rows (B, ·) — constant-size state
+    needs no paging, but DOES need :func:`lm_paged_cache_reset_slot` on
+    admission.  Stacked over periods like :func:`lm_cache_init`."""
+    spec = layer_spec(mcfg)
+    one = {}
+    for i, (mixer, _) in enumerate(spec):
+        if mixer == "attn":
+            one[f"pos{i}"] = attention_paged_cache_init(mcfg, num_blocks, page,
+                                                        dtype)
+        else:
+            one[f"pos{i}"] = mamba2_cache_init(mcfg, batch, dtype)
+    NP = n_periods(mcfg)
+    return jax.tree.map(lambda t: jnp.zeros((NP,) + t.shape, t.dtype), one)
+
+
+def lm_paged_decode_step(params, token, caches, table, lengths, *, mcfg,
+                         page: int):
+    """token: (B,) int32; table (B, n_pages); lengths (B,) per-slot positions
+    → (logits (B, V), new_caches).  Lengths are NOT advanced (host-owned)."""
+    cdt = mcfg.cdtype()
+    x1 = embed(params["embed"], token[:, None], dtype=cdt)       # (B,1,d)
+    spec = layer_spec(mcfg)
+
+    def body(x1, inp):
+        pp, pc = inp
+        new_c = {}
+        for i, (mixer, ffn) in enumerate(spec):
+            lp = pp[f"pos{i}"]
+            h = rmsnorm(lp["norm1"], x1, mcfg.norm_eps)
+            if mixer == "attn":
+                h, new_c[f"pos{i}"] = attention_layer_decode_paged(
+                    lp["attn"], h, pc[f"pos{i}"], table, lengths,
+                    mcfg=mcfg, page=page)
+            else:
+                h, new_c[f"pos{i}"] = mamba2_decode(lp["mamba"], h,
+                                                    pc[f"pos{i}"], mcfg)
+            x1 = x1 + h
+            if ffn != "none":
+                h = rmsnorm(lp["norm2"], x1, mcfg.norm_eps)
+                if ffn == "moe":
+                    h, _ = moe_apply(lp["moe"], h, mcfg)
+                else:
+                    h = swiglu(lp["ffn"], h)
+                x1 = x1 + h
+        return x1, new_c
+
+    x1, new_caches = jax.lax.scan(body, x1, (params["layers"], caches))
+    x1 = rmsnorm(params["final_norm"], x1, mcfg.norm_eps)
+    if mcfg.tie_embeddings:
+        logits = unembed(params["embed"], x1)
+    else:
+        logits = dense(params["lm_head"], x1)
+    return logits[:, 0].astype(jnp.float32), new_caches
+
+
+def lm_has_recurrent_state(mcfg) -> bool:
+    """True when any mixer carries UNPAGED per-slot state (mamba): such
+    state must be zeroed on admission and blocks prefix-block reuse (a
+    cached KV page can't restore a recurrent hidden state)."""
+    return any(mixer != "attn" for mixer, _ in layer_spec(mcfg))
+
+
+def lm_paged_cache_reset_slot(mcfg, caches, slot):
+    """Zero slot-local recurrent (mamba) state on request admission.
+
+    Attention pools need no reset: stale rows in freshly allocated blocks
+    are never read (every read is masked to positions ≤ the slot's length,
+    all of which get written first).  No-op (returns ``caches``) for
+    attention-only stacks."""
+    if not lm_has_recurrent_state(mcfg):
+        return caches
+    spec = layer_spec(mcfg)
+    new = dict(caches)
+    for i, (mixer, _) in enumerate(spec):
+        if mixer != "attn":
+            new[f"pos{i}"] = jax.tree.map(
+                lambda t: t.at[:, slot].set(jnp.zeros_like(t[:, slot])),
+                caches[f"pos{i}"])
+    return new
+
+
+def lm_paged_cache_copy_block(mcfg, caches, src, dst, *, page: int):
+    """Copy pool block ``src`` → ``dst`` in EVERY attention layer's pools
+    (token rows and φ-compressed rows) — the device half of copy-on-write.
+    ``src``/``dst`` may be traced scalars (the engine jits this once)."""
+    spec = layer_spec(mcfg)
+    new = dict(caches)
+    for i, (mixer, _) in enumerate(spec):
+        if mixer != "attn":
+            continue
+        c = dict(caches[f"pos{i}"])
+        for key in c:
+            rows = page if key in ("k", "v") else page // mcfg.bsa.cmp_block
+            blk = jax.lax.dynamic_slice_in_dim(c[key], src * rows, rows, axis=1)
+            c[key] = jax.lax.dynamic_update_slice_in_dim(c[key], blk,
+                                                         dst * rows, axis=1)
+        new[f"pos{i}"] = c
+    return new
 
 
 def lm_prefill(params, tokens, caches, *, mcfg):

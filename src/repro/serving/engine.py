@@ -1,13 +1,24 @@
 """Serving engines: LM decode slots and batched ragged geometry inference.
 
-``ServingEngine`` — static-batched generation: a fixed number of slots
-decode in lockstep (the BSA decode cache tracks one shared position — DESIGN
-§4 notes per-slot lengths as the continuous-batching extension).  Prefill is
-DECODE REPLAY: prompts stream token-by-token through ``serve_step``, which
-is exactly the cache semantics the train path matches (unit-tested
-bit-consistency), so generation after a replayed prefill equals teacher
-forcing.  Jit boundaries: one compiled ``serve_step`` reused for prefill
-and decode.
+``ServingEngine`` — two LM generation modes sharing one projection/decode
+numeric core:
+
+* LOCKSTEP (``generate``): a fixed number of slots decode together with one
+  shared cache position.  Prefill is DECODE REPLAY: prompts stream
+  token-by-token through ``serve_step``, which is exactly the cache
+  semantics the train path matches (unit-tested bit-consistency), so
+  generation after a replayed prefill equals teacher forcing.
+* CONTINUOUS BATCHING (``paged=True``, ``serve``): slots hold independent
+  requests at independent positions over a PAGED KV cache
+  (``serving/paged_cache.py`` block tables + ``nsa_causal_decode_paged``).
+  Every step advances every occupied slot one token — prefill replay and
+  decode interleave freely — finished slots retire on EOS and freed slots
+  admit queued requests mid-flight; hash-chained prefix caching reuses
+  cached KV blocks across requests sharing prompt prefixes (copy-on-write
+  on divergence).  docs/serving.md walks the lifecycle.
+
+Jit boundaries: ONE compiled step per mode (the paged step takes the block
+table + per-slot lengths as data, so admissions never recompile).
 
 ``GeometryEngine`` — the batched path for variable-size point clouds: each
 request cloud is ball-tree ordered on the host, packed with its batch-mates
@@ -21,7 +32,9 @@ stays logarithmic in the size range.
 from __future__ import annotations
 
 import contextlib
+import math
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +44,9 @@ from repro.core.backend import use_backend
 from repro.core.balltree import (bucket_length, pack_ragged, pack_varlen,
                                  build_balltree_permutations, unpack_ragged,
                                  unpack_varlen)
-from repro.launch.steps import make_serve_step
+from repro.launch.steps import (make_paged_serve_step, make_paged_serve_window,
+                                make_serve_step)
+from repro.serving.paged_cache import PagedKVCache
 
 
 def _backend_scope(name: str | None):
@@ -46,21 +61,70 @@ def _backend_scope(name: str | None):
 class ServingEngine:
     def __init__(self, api, params, *, batch_slots: int, max_len: int,
                  cache_dtype=jnp.float32, temperature: float = 0.0, seed: int = 0,
-                 backend: str | None = None):
+                 backend: str | None = None, paged: bool = False,
+                 page: int | None = None, num_blocks: int | None = None,
+                 prefix_cache: bool = True):
+        """``paged=True`` enables the continuous-batching mode (``serve``):
+        ``page`` tokens per pool block (default: the smallest size aligned
+        to both the local window and the compression block), ``num_blocks``
+        pool blocks shared by all slots (default: full dedicated capacity,
+        ``batch_slots · max_len/page`` — prefix sharing then only ADDS
+        headroom), ``prefix_cache`` toggles cross-request prefix block
+        reuse (forced off for models with recurrent per-slot state, which a
+        cached KV page cannot restore)."""
         self.api = api
         self.params = params
         self.B = batch_slots
         self.max_len = max_len
         self.temperature = temperature
         self.backend = backend          # attention-backend override (by name)
+        self.cache_dtype = cache_dtype
         self._rng = jax.random.PRNGKey(seed)
-        self.caches = api.cache_init(batch_slots, max_len, cache_dtype)
+        self.paged = paged
+        if paged:
+            if not api.has_paged_decoder:
+                raise ValueError(f"family {api.mcfg.family!r} has no paged "
+                                 "decode path")
+            if page is None:
+                bsa = api.mcfg.bsa
+                page = math.lcm(bsa.effective_local_window, bsa.cmp_block)
+            if max_len % page:
+                raise ValueError(f"max_len={max_len} not a multiple of "
+                                 f"page={page}")
+            self.page = page
+            self.n_pages = max_len // page
+            self.num_blocks = num_blocks or batch_slots * self.n_pages
+            self._prefix_enabled = prefix_cache and not api.has_recurrent_state
+            self._pstep = jax.jit(make_paged_serve_step(api, page=page))
+            self._wstep = jax.jit(make_paged_serve_window(api, page=page))
+            self._copy = jax.jit(
+                lambda c, s, d: api.cache_copy_block(c, s, d, page))
+            self._reset_slot = jax.jit(api.cache_reset_slot)
+            self._alloc_state()
+        else:
+            self.caches = api.cache_init(batch_slots, max_len, cache_dtype)
         self._step = jax.jit(make_serve_step(api))
         self.tokens_generated = 0
         self.decode_time = 0.0
+        self.serve_steps = 0
 
-    def reset(self, cache_dtype=jnp.float32):
-        self.caches = self.api.cache_init(self.B, self.max_len, cache_dtype)
+    def _alloc_state(self):
+        self.kv = PagedKVCache(n_slots=self.B, num_blocks=self.num_blocks,
+                               page=self.page, n_pages=self.n_pages,
+                               prefix_cache=self._prefix_enabled)
+        self.caches = self.api.paged_cache_init(self.B, self.num_blocks,
+                                                self.page, self.cache_dtype)
+
+    def reset(self, cache_dtype=None):
+        """Drop all cached state.  ``cache_dtype=None`` keeps the dtype the
+        engine was constructed with; passing one switches it from here on."""
+        if cache_dtype is not None:
+            self.cache_dtype = cache_dtype
+        if self.paged:
+            self._alloc_state()
+        else:
+            self.caches = self.api.cache_init(self.B, self.max_len,
+                                              self.cache_dtype)
 
     def prefill(self, prompts: np.ndarray) -> np.ndarray:
         """prompts: (B, P) int32 — replayed through the decode path.
@@ -79,21 +143,246 @@ class ServingEngine:
         self._rng, k = jax.random.split(self._rng)
         return jax.random.categorical(k, logits / self.temperature).astype(jnp.int32)
 
-    def generate(self, prompts: np.ndarray, n_tokens: int) -> np.ndarray:
-        """Greedy/temperature generation.  Returns (B, n_tokens)."""
-        first = self.prefill(prompts)
-        out = [first]
-        tok = jnp.asarray(first)
+    def generate(self, prompts: np.ndarray, n_tokens: int,
+                 eos_id: int | None = None, pad_id: int = 0) -> np.ndarray:
+        """Greedy/temperature generation.  Returns (B, n_tokens).
+
+        With ``eos_id`` set, a slot that samples it RETIRES: its remaining
+        columns are ``pad_id``, it stops being sampled (and counted), and
+        the loop exits early once every slot is done instead of burning
+        decode steps on a fully-retired batch."""
+        first = np.asarray(self.prefill(prompts))
+        done = np.zeros(self.B, bool)
+        if eos_id is not None:
+            done |= first == eos_id
+        emit = np.where(done, pad_id, first).astype(np.int32)
+        out = [emit]
+        self.tokens_generated += int((~done).sum())
+        tok = jnp.asarray(emit)
         t0 = time.time()
         with _backend_scope(self.backend):
             for _ in range(n_tokens - 1):
-                nxt, logits, self.caches = self._step(self.params, self.caches, tok)
-                tok = self._sample(logits)
-                out.append(np.asarray(tok))
+                if done.all():
+                    break
+                nxt, logits, self.caches = self._step(self.params, self.caches,
+                                                      tok)
+                s = np.asarray(self._sample(logits))
+                if eos_id is not None:
+                    done |= s == eos_id
+                emit = np.where(done, pad_id, s).astype(np.int32)
+                out.append(emit)
+                self.tokens_generated += int((~done).sum())
+                tok = jnp.asarray(emit)
         jax.block_until_ready(tok)
         self.decode_time += time.time() - t0
-        self.tokens_generated += self.B * n_tokens
+        while len(out) < n_tokens:                   # early-exit padding
+            out.append(np.full(self.B, pad_id, np.int32))
         return np.stack(out, axis=1)
+
+    # -- continuous batching over the paged cache ---------------------------
+
+    def serve(self, prompts, max_new_tokens: int,
+              eos_id: int | None = None) -> list[np.ndarray]:
+        """Continuous-batching generation over an arbitrary request list.
+
+        ``prompts``: sequence of 1-D int token arrays (ANY lengths up to
+        ``max_len``).  Returns one generated-token array per prompt (EOS
+        excluded, at most ``max_new_tokens``; a slot also stops at cache
+        capacity).  Iteration-level scheduling: every engine step advances
+        every occupied slot by one token — replaying its prompt (prefill)
+        or feeding its last sample (decode) — so short requests drain early
+        and their slots admit queued work mid-flight.
+        """
+        if not self.paged:
+            raise RuntimeError("serve() requires ServingEngine(paged=True)")
+        prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+        if eos_id is None and self.temperature <= 0.0:
+            return self._serve_windowed(prompts, max_new_tokens)
+        results: list = [None] * len(prompts)
+        queue = deque(range(len(prompts)))
+        kv = self.kv
+        slot_req = np.full(self.B, -1, np.int64)
+        slot_feed = np.zeros(self.B, np.int32)
+        slot_decode = np.zeros(self.B, bool)    # feed = last sample, not prompt
+        slot_gen: list[list] = [[] for _ in range(self.B)]
+        # EOS makes the schedule VALUE-dependent: the sample must come back to
+        # the host every step to decide retirement.  Without it the schedule
+        # is length-only, so steps pipeline: samples feed back device-side
+        # (prev → where(slot_decode)) and the whole token history is pulled
+        # ONCE at the end — the same async-dispatch regime lockstep prefill
+        # enjoys, now covering decode too.
+        sync = eos_id is not None
+        hist: list = []                          # (B,) device samples per step
+        dev_table, tver = None, -1
+        prev = None
+        t0 = time.time()
+        with _backend_scope(self.backend):
+            while queue or (slot_req >= 0).any():
+                # 1) admission into free slots (prefix-reuse aware)
+                for s in range(self.B):
+                    if slot_req[s] < 0 and queue:
+                        rid = queue.popleft()
+                        reused = kv.admit(s, prompts[rid])
+                        if self.api.has_recurrent_state:
+                            self.caches = self._reset_slot(self.caches, s)
+                        slot_req[s] = rid
+                        slot_gen[s] = []
+                        slot_feed[s] = prompts[rid][reused]
+                        slot_decode[s] = False
+                # 2) make every occupied slot's next position writable
+                for s in np.nonzero(slot_req >= 0)[0]:
+                    for op in kv.prepare_append(int(s)):
+                        self.caches = self._copy(self.caches, op.src, op.dst)
+                if kv.version != tver:           # table changed since last push
+                    dev_table = jnp.asarray(kv.table.copy())
+                    tver = kv.version
+                # 3) one decode step for the whole batch.  Host arrays are
+                # pushed as COPIES: with async dispatch the step may still be
+                # in flight when step 4 mutates them, and the CPU backend can
+                # alias a pushed numpy buffer instead of copying it.
+                tok = jnp.asarray(slot_feed.copy())
+                if not sync and prev is not None and slot_decode.any():
+                    tok = jnp.where(jnp.asarray(slot_decode.copy()), prev, tok)
+                nxt, logits, self.caches = self._pstep(
+                    self.params, self.caches, tok, dev_table,
+                    jnp.asarray(kv.lengths.copy()))
+                prev = nxt if self.temperature <= 0.0 else self._sample(logits)
+                if sync:
+                    sampled = np.asarray(prev)
+                else:
+                    hist.append(prev)
+                self.serve_steps += 1
+                # 4) commit, transition, retire, publish prefix pages
+                step_idx = len(hist) - 1
+                for s in range(self.B):
+                    rid = int(slot_req[s])
+                    if rid < 0:
+                        continue
+                    prompt = prompts[rid]
+                    fed_pos = int(kv.lengths[s])
+                    kv.committed(s)
+                    kv.seal_prompt_page(s, prompt)
+                    if fed_pos < len(prompt) - 1:
+                        slot_feed[s] = prompt[fed_pos + 1]   # prefill replay
+                        slot_decode[s] = False
+                        continue
+                    done = False                             # decode sample
+                    if sync:
+                        t_s = int(sampled[s])
+                        done = t_s == eos_id
+                        if not done:
+                            slot_gen[s].append(t_s)
+                            slot_feed[s] = t_s
+                    else:
+                        slot_gen[s].append((step_idx, s))    # resolved at end
+                    if not done:
+                        self.tokens_generated += 1
+                        slot_decode[s] = True
+                        done = (len(slot_gen[s]) >= max_new_tokens
+                                or int(kv.lengths[s]) >= kv.capacity)
+                    if done:
+                        results[rid] = slot_gen[s]
+                        kv.retire(s)
+                        slot_req[s] = -1
+                        slot_feed[s] = 0
+                        slot_decode[s] = False
+        if hist:
+            all_samples = np.asarray(jnp.stack(hist))        # the ONE pull
+            results = [np.asarray([all_samples[i, s] for i, s in r], np.int32)
+                       for r in results]
+        else:
+            results = [np.asarray(r, np.int32) for r in results]
+        if prev is not None:
+            jax.block_until_ready(prev)
+        self.decode_time += time.time() - t0
+        return results
+
+    MAX_WINDOW = 32
+
+    def _serve_windowed(self, prompts, max_new_tokens: int) -> list[np.ndarray]:
+        """The greedy/no-EOS fast path of :meth:`serve`: W-step windows.
+
+        Without EOS the whole schedule depends only on LENGTHS, which the
+        host knows in advance — so between scheduling events (a slot
+        retiring, a request admitted) there is nothing to decide per step.
+        The engine picks the window W = steps until the next retirement
+        (quantized to powers of two, capped at ``MAX_WINDOW`` so at most
+        log₂ variants compile), pre-allocates every page the window
+        touches, and runs all W steps in one compiled ``lax.scan`` —
+        per-token host overhead is amortized W-fold and samples come back
+        in one (W, B) array per window, pulled once at the very end.
+        """
+        results: list = [None] * len(prompts)
+        queue = deque(range(len(prompts)))
+        kv = self.kv
+        slot_req = np.full(self.B, -1, np.int64)
+        slot_gen: list[list] = [[] for _ in range(self.B)]
+        hist: list = []                          # (W, B) device samples
+        base = 0                                 # global step index of window
+        dev_table, tver = None, -1
+        prev = jnp.zeros(self.B, jnp.int32)
+        t0 = time.time()
+        with _backend_scope(self.backend):
+            while queue or (slot_req >= 0).any():
+                for s in range(self.B):          # admission into free slots
+                    if slot_req[s] < 0 and queue:
+                        rid = queue.popleft()
+                        kv.admit(s, prompts[rid])
+                        if self.api.has_recurrent_state:
+                            self.caches = self._reset_slot(self.caches, s)
+                        slot_req[s] = rid
+                        slot_gen[s] = []
+                occ = np.nonzero(slot_req >= 0)[0]
+                # window = steps until the FIRST slot must retire
+                horizon = self.MAX_WINDOW
+                for s in occ:
+                    pr = prompts[slot_req[s]]
+                    stop = min(len(pr) - 1 + max_new_tokens, kv.capacity)
+                    horizon = min(horizon, stop - int(kv.lengths[s]))
+                W = 1 << (int(horizon).bit_length() - 1)     # quantize down
+                feed = np.zeros((W, self.B), np.int32)
+                use_prev = np.zeros((W, self.B), bool)
+                for s in occ:
+                    pr = prompts[slot_req[s]]
+                    t = int(kv.lengths[s])
+                    for op in kv.prepare_window(int(s), W):
+                        self.caches = self._copy(self.caches, op.src, op.dst)
+                    n_pref = max(0, min(W, len(pr) - t))     # prompt feeds
+                    feed[:n_pref, s] = pr[t:t + n_pref]
+                    use_prev[n_pref:, s] = True              # then self-feed
+                if kv.version != tver:
+                    dev_table = jnp.asarray(kv.table.copy())
+                    tver = kv.version
+                samples, self.caches = self._wstep(
+                    self.params, self.caches, jnp.asarray(feed),
+                    jnp.asarray(use_prev), prev, dev_table,
+                    jnp.asarray(kv.lengths.copy()),
+                    jnp.asarray((slot_req >= 0).astype(np.int32)))
+                prev = samples[-1]
+                hist.append(samples)
+                self.serve_steps += W
+                for s in occ:
+                    rid = int(slot_req[s])
+                    pr = prompts[rid]
+                    old = int(kv.lengths[s])
+                    kv.committed(int(s), W)
+                    kv.seal_prompt_pages(int(s), pr, old)
+                    gen0 = min(W, max(0, len(pr) - 1 - old))  # 1st decode step
+                    for i in range(gen0, W):
+                        slot_gen[s].append((base + i, s))
+                    self.tokens_generated += W - gen0
+                    if (len(slot_gen[s]) >= max_new_tokens
+                            or old + W >= kv.capacity):
+                        results[rid] = slot_gen[s]
+                        kv.retire(int(s))
+                        slot_req[s] = -1
+                base += W
+        if hist:                                 # the ONE device→host pull
+            allv = np.concatenate([np.asarray(h) for h in hist])
+            results = [np.asarray([allv[i, s] for i, s in r], np.int32)
+                       for r in results]
+        self.decode_time += time.time() - t0
+        return results
 
     @property
     def tokens_per_second(self) -> float:

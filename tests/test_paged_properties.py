@@ -1,0 +1,151 @@
+"""Property-based invariants of the paged-KV host controller (hypothesis).
+
+Random operation sequences against :mod:`repro.serving.paged_cache`, checked
+against an independent model after EVERY op:
+
+* allocator: a block is free XOR refcounted, counts mirror a dict model,
+  double-free / free-incref always raise — no leaks under any interleaving;
+* controller: admit / decode-step / retire / fork interleavings keep
+  refcounts equal to live references (slot table entries + prefix nodes);
+* prefix tree: hash-chained lookups return exactly the pages before the
+  first token difference — no aliasing between prompts, ever.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -e .[test]); skipping module")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.paged_cache import BlockAllocator, PagedKVCache, PrefixCache
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["alloc", "incref", "decref"]),
+                              st.integers(0, 15)), max_size=60),
+       n=st.integers(1, 8))
+def test_allocator_matches_refcount_model(ops, n):
+    a = BlockAllocator(n)
+    model: dict[int, int] = {}               # live block -> refcount
+    for op, arg in ops:
+        if op == "alloc":
+            b = a.alloc()
+            if b is None:
+                assert len(model) == n       # exhausted ⇔ all blocks live
+            else:
+                assert b not in model
+                model[b] = 1
+        elif op == "incref":
+            b = arg % n
+            if b in model:
+                model[b] += 1
+                assert a.incref(b) == model[b]
+            else:
+                with pytest.raises(RuntimeError):
+                    a.incref(b)
+        else:
+            b = arg % n
+            if b in model:
+                model[b] -= 1
+                assert a.decref(b) == model[b]
+                if model[b] == 0:
+                    del model[b]
+            else:
+                with pytest.raises(RuntimeError):
+                    a.decref(b)              # double free always raises
+        a.check()
+        assert a.live_count == len(model)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_controller_random_lifecycle_keeps_refcounts_exact(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    S = 3
+    kv = PagedKVCache(n_slots=S, num_blocks=10, page=4, n_pages=4,
+                      prefix_cache=data.draw(st.booleans()))
+    prompts: dict[int, np.ndarray] = {}
+    for _ in range(data.draw(st.integers(5, 40))):
+        op = data.draw(st.sampled_from(["admit", "step", "step", "retire",
+                                        "fork"]))
+        free = [s for s in range(S) if not kv.active[s]]
+        act = [s for s in range(S) if kv.active[s]]
+        if op == "admit" and free:
+            s = free[0]
+            length = int(rng.integers(1, kv.capacity + 1))
+            prompts[s] = rng.integers(0, 30, length).astype(np.int32)
+            kv.admit(s, prompts[s])
+        elif op == "step" and act:
+            s = act[int(rng.integers(len(act)))]
+            if int(kv.lengths[s]) < kv.capacity:
+                old = int(kv.lengths[s])
+                try:
+                    kv.prepare_append(s)
+                except RuntimeError:         # pool exhausted: legal outcome
+                    kv.check()
+                    continue
+                kv.committed(s)
+                kv.seal_prompt_pages(s, prompts[s], old)
+        elif op == "retire" and act:
+            kv.retire(act[int(rng.integers(len(act)))])
+        elif op == "fork" and act and free:
+            src = act[int(rng.integers(len(act)))]
+            kv.fork(free[0], src)
+            prompts[free[0]] = prompts[src]
+        kv.check()                           # refcounts == live references
+    for s in range(S):
+        if kv.active[s]:
+            kv.retire(s)
+    kv.check()
+    live = len(kv.prefix) if kv.prefix is not None else 0
+    assert kv.allocator.live_count == live   # slots gone ⇒ only tree refs
+
+
+@settings(max_examples=40, deadline=None)
+@given(tokens=st.lists(st.integers(0, 9), min_size=8, max_size=16),
+       mut_at=st.integers(0, 7), mut_to=st.integers(0, 9))
+def test_prefix_lookup_never_aliases(tokens, mut_at, mut_to):
+    page = 4
+    a = BlockAllocator(16)
+    pc = PrefixCache(a, page)
+    t1 = np.asarray(tokens, np.int32)
+    t2 = t1.copy()
+    t2[mut_at] = mut_to
+    for pg in range(len(t1) // page):
+        b = a.alloc()
+        pc.insert(t1, pg, b)
+        a.decref(b)
+    cached = pc.lookup(t1)
+    assert len(cached) == len(t1) // page    # full chain round-trips
+    if (t1 == t2).all():
+        assert pc.lookup(t2) == cached
+    else:
+        diff_pg = int(np.flatnonzero(t1 != t2)[0]) // page
+        assert pc.lookup(t2) == cached[:diff_pg]
+    pc.clear()
+    a.check()
+    assert a.free_count == 16                # tree refs fully released
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_prompts=st.integers(1, 4), seed=st.integers(0, 2**32 - 1),
+       n_evict=st.integers(0, 8))
+def test_prefix_eviction_only_drops_leaves(n_prompts, seed, n_evict):
+    page = 4
+    a = BlockAllocator(32)
+    pc = PrefixCache(a, page)
+    rng = np.random.default_rng(seed)
+    for _ in range(n_prompts):
+        toks = rng.integers(0, 3, 12).astype(np.int32)
+        for pg in range(len(toks) // page):
+            b = a.alloc()
+            pc.insert(toks, pg, b)           # may dedup: first writer wins
+            a.decref(b)                      # caller ref gone either way
+    before = len(pc)
+    dropped = pc.evict_lru(n_evict)
+    assert dropped == min(n_evict, before)
+    a.check()
+    # interior nodes survive while any child holds them: every remaining
+    # node's parent chain is intact (lookup of its own prefix still works)
+    assert a.live_count == len(pc)

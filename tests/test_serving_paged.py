@@ -1,0 +1,354 @@
+"""Continuous-batching correctness: the paged decode path against oracles.
+
+Three oracle layers, strongest first (docs/serving.md):
+
+* ATTENTION ORACLE — ``nsa_causal_decode_paged`` over a shuffled block
+  table, with slots admitted in staggered waves at ragged lengths, must
+  match the full-recompute train path ``nsa_causal_attention`` at every
+  position, on every CI backend (jnp / pallas / interpret).
+* ENGINE ORACLE — ``ServingEngine(paged=True).serve`` over mixed-length
+  requests (≥3 admission waves) must emit exactly the tokens the proven
+  lockstep engine generates per prompt — prefix reuse, copy-on-write and
+  windowed scheduling included.
+* HOST INVARIANTS — allocator/prefix-tree unit checks here; the randomized
+  property suite lives in tests/test_paged_properties.py (hypothesis).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BSAConfig,
+    init_paged_decode_cache,
+    nsa_causal_attention,
+    nsa_causal_decode,
+    nsa_causal_decode_paged,
+    nsa_init,
+)
+from repro.core.backend import use_backend
+from repro.serving.paged_cache import BlockAllocator, PagedKVCache, PrefixCache
+
+KEY = jax.random.PRNGKey(3)
+BACKENDS = ["jnp", "pallas", "interpret"]
+
+
+def _cfg(**kw):
+    # group_size=0 + query_cmp_selection=False is the config whose decode
+    # path is EXACT vs train (grouped selection is an approximation that
+    # legitimately diverges once top-k starts discriminating)
+    base = dict(ball_size=32, local_window=32, cmp_block=8, slc_block=8,
+                top_k=2, group_size=0, query_cmp_selection=False)
+    base.update(kw)
+    return BSAConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# attention-level decode oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_paged_decode_matches_train_oracle_staggered(backend):
+    """Shuffled block table + 3 staggered admission waves + ragged lengths
+    == full-recompute train attention, per position, per slot."""
+    cfg = _cfg(backend=backend)
+    B, Hq, Hkv, D = 3, 4, 2, 16
+    page, n_pages, num_blocks = 32, 4, 12
+    lens = [96, 64, 33]                    # ragged; max fits n_pages * page
+    starts = [0, 17, 41]                   # three admission waves
+    N_pad = 128                            # w-aligned oracle length
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, N_pad, Hq, D))
+    k = jax.random.normal(ks[1], (B, N_pad, Hkv, D))
+    v = jax.random.normal(ks[2], (B, N_pad, Hkv, D))
+    params = nsa_init(ks[3], cfg, n_heads=Hq, n_kv_heads=Hkv, head_dim=D,
+                      d_model=Hq * D)
+
+    with use_backend(backend):
+        # oracle: full causal recompute of each slot's own sequence; causality
+        # makes positions < len independent of the aligned tail padding
+        ref = nsa_causal_attention(params, q, k, v, cfg=cfg)
+
+        cache = init_paged_decode_cache(num_blocks, page, Hkv, D, cfg,
+                                        dtype=jnp.float32)
+        # shuffled block assignment: slot pages deliberately non-contiguous
+        rng = np.random.default_rng(0)
+        blocks = rng.permutation(num_blocks)
+        table = np.full((B, n_pages), num_blocks, np.int32)    # all trash
+        lengths = np.zeros(B, np.int32)
+        step = jax.jit(lambda p, a, b, c, cc, tt, ll: nsa_causal_decode_paged(
+            p, a, b, c, cc, tt, ll, cfg=cfg, page=page))
+        next_blk = 0
+        T = max(starts[s] + lens[s] for s in range(B))
+        for t in range(T):
+            for s in range(B):             # staggered admission + paging
+                pos = t - starts[s]
+                if 0 <= pos < lens[s] and pos % page == 0:
+                    table[s, pos // page] = blocks[next_blk]
+                    next_blk += 1
+            active = [s for s in range(B)
+                      if 0 <= t - starts[s] < lens[s]]
+            pos = np.array([max(t - starts[s], 0) for s in range(B)], np.int32)
+            pos = np.minimum(pos, np.array(lens) - 1).astype(np.int32)
+            idx = jnp.asarray(pos)[:, None, None, None]
+            q1 = jnp.take_along_axis(q, idx, axis=1)
+            k1 = jnp.take_along_axis(k, idx, axis=1)
+            v1 = jnp.take_along_axis(v, idx, axis=1)
+            lengths_t = np.where([s in active for s in range(B)], pos, 0)
+            out, cache = step(params, q1, k1, v1, cache,
+                              jnp.asarray(table.copy()),
+                              jnp.asarray(lengths_t.astype(np.int32)))
+            for s in active:
+                np.testing.assert_allclose(
+                    np.asarray(out[s, 0]), np.asarray(ref[s, pos[s]]),
+                    atol=2e-5,
+                    err_msg=f"slot {s} pos {pos[s]} (backend {backend})")
+
+
+def test_dense_decode_is_degenerate_paged_layout():
+    """The lockstep wrapper (identity table, page = max_len) reproduces the
+    paged core bit-for-bit — one numeric path serves both modes."""
+    cfg = _cfg()
+    B, N, Hq, Hkv, D = 2, 64, 4, 2, 16
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, N, Hq, D))
+    k = jax.random.normal(ks[1], (B, N, Hkv, D))
+    v = jax.random.normal(ks[2], (B, N, Hkv, D))
+    params = nsa_init(ks[3], cfg, n_heads=Hq, n_kv_heads=Hkv, head_dim=D,
+                      d_model=Hq * D)
+    ref = nsa_causal_attention(params, q, k, v, cfg=cfg)
+    from repro.core import init_decode_cache
+    cache = init_decode_cache(B, N, Hkv, D, cfg, dtype=jnp.float32)
+    step = jax.jit(lambda p, a, b, c, cc: nsa_causal_decode(p, a, b, c, cc,
+                                                            cfg=cfg))
+    for t in range(N):
+        out, cache = step(params, q[:, t:t + 1], k[:, t:t + 1],
+                          v[:, t:t + 1], cache)
+        np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref[:, t]),
+                                   atol=2e-5, err_msg=f"pos {t}")
+
+
+def test_paged_cache_rejects_misaligned_page():
+    with pytest.raises(ValueError):
+        init_paged_decode_cache(4, 24, 2, 16, _cfg())       # 24 % w != 0
+
+
+def test_paged_gather_kernel_matches_jnp():
+    """The Pallas scalar-prefetch gather == fancy indexing (forced through
+    the kernel even under interpret mode)."""
+    from repro.kernels.ops import paged_gather
+    pool = jax.random.normal(KEY, (40, 2, 16))
+    rows = jnp.asarray(np.random.default_rng(0).integers(0, 40, (3, 7)),
+                       jnp.int32)
+    got = paged_gather(pool, rows, interpret=True, force_kernel=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(pool[rows]),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engine-level serve oracle (smoke LM)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    from repro.configs import get_config
+    from repro.configs.reduce import smoke_config
+    from repro.models.api import model_api
+    mcfg = smoke_config(get_config("tinyllama-1.1b"))
+    mcfg = mcfg.scaled(n_layers=1)          # one BSA layer is plenty here
+    api = model_api(mcfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return mcfg, api, params
+
+
+def _lockstep_ref(api, params, prompt, n_tokens, max_len=128):
+    from repro.serving import ServingEngine
+    eng = ServingEngine(api, params, batch_slots=1, max_len=max_len)
+    return eng.generate(prompt[None], n_tokens)[0]
+
+
+def test_serve_matches_lockstep_three_waves(tiny_lm):
+    mcfg, api, params = tiny_lm
+    from repro.serving import ServingEngine
+    rng = np.random.default_rng(0)
+    lens = [40, 70, 20, 90, 33]            # ragged; ≥3 waves on 2 slots
+    prompts = [rng.integers(0, mcfg.vocab_size, n, dtype=np.int32)
+               for n in lens]
+    eng = ServingEngine(api, params, batch_slots=2, max_len=128, paged=True)
+    res = eng.serve(prompts, max_new_tokens=6)
+    eng.kv.check()
+    # every slot retired: only sealed prompt pages (prefix tree) stay live
+    assert eng.kv.allocator.live_count == len(eng.kv.prefix)
+    for i, p in enumerate(prompts):
+        want = _lockstep_ref(api, params, p, 6)
+        np.testing.assert_array_equal(res[i], want, err_msg=f"request {i}")
+
+
+def test_serve_eos_retires_slot_and_admits_next(tiny_lm):
+    mcfg, api, params = tiny_lm
+    from repro.serving import ServingEngine
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, mcfg.vocab_size, n, dtype=np.int32)
+               for n in (25, 37, 18)]
+    refs = [_lockstep_ref(api, params, p, 8) for p in prompts]
+    eos = int(refs[0][3])                  # force an early EOS for request 0
+    eng = ServingEngine(api, params, batch_slots=1, max_len=128, paged=True)
+    res = eng.serve(prompts, max_new_tokens=8, eos_id=eos)
+    eng.kv.check()
+    for i, (got, want) in enumerate(zip(res, refs)):
+        cut = np.nonzero(want == eos)[0]
+        want = want[:cut[0]] if len(cut) else want   # EOS excluded, stops
+        np.testing.assert_array_equal(got, want, err_msg=f"request {i}")
+    assert len(res[0]) == 3                # retired at the forced EOS
+
+
+def test_serve_prefix_reuse_is_exact_and_counted(tiny_lm):
+    mcfg, api, params = tiny_lm
+    from repro.serving import ServingEngine
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, mcfg.vocab_size, 64, dtype=np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(0, mcfg.vocab_size, k,
+                                            dtype=np.int32)])
+               for k in (5, 11, 0)]        # k=0: fully-cached prompt (CoW)
+    eng = ServingEngine(api, params, batch_slots=1, max_len=128, paged=True)
+    res = eng.serve(prompts, max_new_tokens=4)
+    eng.kv.check()
+    assert eng.kv.blocks_reused >= 4       # 2 shared pages × 2 later requests
+    assert eng.kv.cow_copies >= 1          # full-cache tail recompute
+    for i, p in enumerate(prompts):
+        want = _lockstep_ref(api, params, p, 4)
+        np.testing.assert_array_equal(res[i], want, err_msg=f"request {i}")
+
+
+def test_serve_no_prefix_cache_still_exact(tiny_lm):
+    mcfg, api, params = tiny_lm
+    from repro.serving import ServingEngine
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, mcfg.vocab_size, 45, dtype=np.int32)
+    eng = ServingEngine(api, params, batch_slots=1, max_len=128, paged=True,
+                        prefix_cache=False)
+    res = eng.serve([p, p], max_new_tokens=4)
+    assert eng.kv.blocks_reused == 0
+    want = _lockstep_ref(api, params, p, 4)
+    np.testing.assert_array_equal(res[0], want)
+    np.testing.assert_array_equal(res[1], want)
+
+
+def test_generate_stops_sampling_retired_slots(tiny_lm):
+    """Satellite: generate() with eos_id pads retired slots, stops counting
+    them, and exits early when every slot is done."""
+    mcfg, api, params = tiny_lm
+    from repro.serving import ServingEngine
+    rng = np.random.default_rng(4)
+    prompts = rng.integers(0, mcfg.vocab_size, (2, 24), dtype=np.int32)
+    ref_eng = ServingEngine(api, params, batch_slots=2, max_len=128)
+    ref = ref_eng.generate(prompts, 8)
+    eos = int(ref[0, 2])                   # retire slot 0 after 2 tokens
+    eng = ServingEngine(api, params, batch_slots=2, max_len=128)
+    before = eng.tokens_generated
+    out = eng.generate(prompts, 8, eos_id=eos, pad_id=-1)
+    assert out.shape == (2, 8)
+    np.testing.assert_array_equal(out[0, :2], ref[0, :2])
+    assert (out[0, 2:] == -1).all()        # EOS + padding, never resampled
+    row1 = out[1]
+    live1 = row1[row1 != -1]
+    np.testing.assert_array_equal(live1, ref[1, :len(live1)])
+    counted = eng.tokens_generated - before
+    assert counted < 16                    # retired slot not counted
+
+
+def test_reset_threads_cache_dtype(tiny_lm):
+    """Satellite: reset() keeps the constructed dtype and reset(dtype=...)
+    actually switches it — in both engine modes."""
+    mcfg, api, params = tiny_lm
+    from repro.serving import ServingEngine
+    for paged in (False, True):
+        eng = ServingEngine(api, params, batch_slots=1, max_len=128,
+                            cache_dtype=jnp.bfloat16, paged=paged)
+        leaf = jax.tree.leaves(eng.caches)[0]
+        assert leaf.dtype == jnp.bfloat16
+        eng.reset()
+        assert jax.tree.leaves(eng.caches)[0].dtype == jnp.bfloat16
+        eng.reset(cache_dtype=jnp.float32)
+        assert jax.tree.leaves(eng.caches)[0].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# host-side unit checks (allocator, prefix tree, controller)
+# ---------------------------------------------------------------------------
+
+def test_allocator_basics():
+    a = BlockAllocator(3)
+    b0, b1, b2 = a.alloc(), a.alloc(), a.alloc()
+    assert sorted([b0, b1, b2]) == [0, 1, 2] and a.alloc() is None
+    a.incref(b1)
+    assert a.decref(b1) == 1 and a.free_count == 0
+    assert a.decref(b1) == 0 and a.free_count == 1
+    with pytest.raises(RuntimeError):
+        a.decref(b1)                       # double free
+    with pytest.raises(RuntimeError):
+        a.incref(b1)                       # incref on free block
+    a.check()
+
+
+def test_prefix_tree_chains_do_not_alias():
+    a = BlockAllocator(8)
+    pc = PrefixCache(a, page=4)
+    t1 = np.arange(8, dtype=np.int32)
+    t2 = t1.copy()
+    t2[1] = 99                             # differs INSIDE page 0
+    for toks in (t1, t2):
+        for pg in range(2):
+            b = a.alloc()
+            pc.insert(toks, pg, b)         # tree takes its own reference
+            a.decref(b)
+    assert len(pc) == 4                    # no node shared across prefixes
+    assert pc.lookup(t1) != pc.lookup(t2)
+    # same page-1 tokens under different page-0 ⇒ different chained keys
+    assert pc.chain_keys(t1)[1] != pc.chain_keys(t2)[1]
+    pc.clear()
+    a.check()
+    assert a.free_count == 8
+
+
+def test_controller_fork_copy_on_write():
+    kv = PagedKVCache(n_slots=2, num_blocks=8, page=4, n_pages=4,
+                      prefix_cache=False)
+    kv.admit(0, np.arange(5, dtype=np.int32))
+    for _ in range(6):                     # fill past one page
+        kv.prepare_append(0)
+        kv.committed(0)
+    kv.fork(1, 0)
+    assert kv.allocator.refcount(int(kv.table[0, 0])) == 2
+    ops = kv.prepare_append(1)             # shared tail page must CoW
+    assert len(ops) == 1 and kv.cow_copies == 1
+    assert kv.table[0, 1] != kv.table[1, 1]
+    assert kv.table[0, 0] == kv.table[1, 0]    # full page still shared
+    kv.check()
+    kv.retire(0)
+    kv.retire(1)
+    kv.check()
+    assert kv.allocator.live_count == 0
+
+
+def test_controller_pool_exhaustion_evicts_then_raises():
+    kv = PagedKVCache(n_slots=2, num_blocks=2, page=4, n_pages=4)
+    kv.admit(0, np.arange(4, dtype=np.int32))
+    for _ in range(4):
+        kv.prepare_append(0)
+        kv.committed(0)
+    kv.seal_prompt_pages(0, np.arange(4, dtype=np.int32), 0)
+    kv.retire(0)                           # page lives on in the prefix tree
+    assert kv.allocator.live_count == 1
+    kv.admit(1, np.full(12, 7, np.int32))  # different prompt: no reuse
+    kv.prepare_append(1)
+    kv.committed(1, 4)
+    kv.prepare_append(1)                   # 2nd block: evicts the LRU leaf
+    kv.committed(1, 4)
+    assert len(kv.prefix) == 0
+    with pytest.raises(RuntimeError, match="exhausted"):
+        kv.prepare_append(1)               # 3rd block: nothing left to evict
