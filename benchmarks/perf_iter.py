@@ -460,6 +460,85 @@ def time_serve_benchmark(args) -> None:
         _check_regression(record, args.baseline, args.max_regression)
 
 
+def time_mesh_benchmark(args) -> None:
+    """§Sharded scaling: one executed fwd+bwd BSA train step on a single
+    device vs the SAME step under the ``"sharded"`` backend on an N-device
+    ``make_local_mesh`` (``--mesh N`` — devices are XLA host-platform fakes
+    on CPU, so this measures the shard_map partitioning overhead/benefit,
+    not real multi-chip speedup; compare runs on similar hosts only).
+
+    The recorded ``scaling_efficiency`` is the sharded/single throughput
+    RATIO measured in the same invocation, so the CI gate is invariant to
+    runner speed (the serving ``speedup_vs_lockstep`` pattern).  On shared-
+    core fake devices the honest expectation is ≈1, not N.
+
+      PYTHONPATH=src python -m benchmarks.perf_iter --mesh 8 \
+          --n 1024 --batch 2 --heads 4 --kv-heads 2 --head-dim 32
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import emit, time_fn
+    from repro.core import BSAConfig, bsa_attention, bsa_init
+    from repro.core.backend import use_backend
+    from repro.distributed import mesh_context
+    from repro.launch.mesh import make_local_mesh
+
+    p = args.mesh
+    B, N = args.batch, args.n
+    Hq, Hkv, D = args.heads, args.kv_heads, args.head_dim
+    ball = 64
+    if N % (p * ball):
+        raise SystemExit(f"--mesh {p}: --n {N} must be a multiple of "
+                         f"{p} devices x ball {ball}")
+    cfg = BSAConfig(ball_size=ball, local_window=ball, cmp_block=8, top_k=4,
+                    group_size=8, backend=args.backend or "jnp")
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    params = bsa_init(ks[0], cfg, n_heads=Hq, n_kv_heads=Hkv, head_dim=D,
+                      d_model=Hq * D)
+    q = jax.random.normal(ks[1], (B, N, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[2], (B, N, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[3], (B, N, Hkv, D), jnp.float32)
+
+    def loss(p_, q, k, v):
+        return (bsa_attention(p_, q, k, v, cfg=cfg) ** 2).sum() / N
+
+    n_pts = B * N
+    step_1 = jax.jit(jax.value_and_grad(loss))        # traced single-device
+    us_1 = time_fn(lambda *a: jax.block_until_ready(step_1(*a)),
+                   params, q, k, v, warmup=2, iters=5)
+    mesh = make_local_mesh(p)
+    with mesh_context(mesh), use_backend("sharded"):
+        step_p = jax.jit(jax.value_and_grad(loss))    # traced sharded
+        us_p = time_fn(lambda *a: jax.block_until_ready(step_p(*a)),
+                       params, q, k, v, warmup=2, iters=5)
+    pps_1, pps_p = n_pts / (us_1 / 1e6), n_pts / (us_p / 1e6)
+    eff = pps_p / pps_1
+    emit(f"perf_iter/mesh{p}_train_step_b{B}_n{N}", us_p,
+         f"points_per_sec={pps_p:.0f};single_dev={pps_1:.0f};"
+         f"scaling_efficiency={eff:.2f}")
+    print(f"# sharded x{p} vs single device: {eff:.2f}x points/sec "
+          f"({pps_p:.0f} vs {pps_1:.0f})", flush=True)
+
+    record = {
+        "mesh": p,
+        "shape": {"batch": B, "n": N, "heads": Hq, "kv_heads": Hkv,
+                  "head_dim": D},
+        "backend_inner": args.backend or "jnp",
+        "single": {"us_per_step": round(us_1, 1),
+                   "points_per_sec": round(pps_1, 1)},
+        "sharded": {"us_per_step": round(us_p, 1),
+                    "points_per_sec": round(pps_p, 1)},
+        "points_per_sec": round(pps_p, 1),
+        "scaling_efficiency": round(eff, 3),
+    }
+    if args.bench_json:
+        Path(args.bench_json).write_text(json.dumps(record, indent=1) + "\n")
+        print(f"# wrote {args.bench_json}", flush=True)
+    if args.baseline:
+        _check_regression(record, args.baseline, args.max_regression)
+
+
 def _check_regression(record: dict, baseline_path: str, max_regression: float):
     """CI gate: fail when throughput regressed > max_regression vs the
     committed baseline record.  Ragged records compare against the
@@ -473,6 +552,24 @@ def _check_regression(record: dict, baseline_path: str, max_regression: float):
               flush=True)
         return
     base = json.loads(p.read_text())
+    if record.get("mesh"):
+        # gate on the sharded/single-device RATIO measured in one
+        # invocation — invariant to runner speed like the serving gate
+        base_eff = base.get("sharded_mesh", {}).get("scaling_efficiency")
+        if not base_eff:
+            print("# baseline has no sharded_mesh.scaling_efficiency — "
+                  "regression gate skipped", flush=True)
+            return
+        eff = record["scaling_efficiency"]
+        ratio = eff / base_eff
+        print(f"# scaling efficiency vs baseline: {ratio:.2f}x "
+              f"({eff:.2f} vs {base_eff:.2f} sharded/single)", flush=True)
+        if ratio < 1.0 - max_regression:
+            raise SystemExit(
+                f"sharded scaling regression: {eff:.2f} sharded/single is "
+                f"{(1 - ratio) * 100:.0f}% below baseline {base_eff:.2f} "
+                f"(allowed: {max_regression * 100:.0f}%)")
+        return
     if record.get("serving"):
         # gate on the paged/lockstep RATIO, not absolute tok/s: both modes
         # run on the same host in the same invocation, so the ratio is
@@ -567,6 +664,11 @@ def main():
     ap.add_argument("--heads", type=int, default=4)
     ap.add_argument("--kv-heads", type=int, default=2)
     ap.add_argument("--head-dim", type=int, default=32)
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="time one fwd+bwd BSA step single-device vs the "
+                         "'sharded' backend on an N-device local mesh; "
+                         "--bench-json/--baseline gate the runner-speed-"
+                         "invariant scaling_efficiency ratio")
     ap.add_argument("--serve", action="store_true",
                     help="time lockstep batches vs paged continuous batching "
                          "on a ragged request mix (useful tokens/sec; "
@@ -582,6 +684,9 @@ def main():
         os.environ["REPRO_AUTOTUNE"] = "1"
     if args.serve:
         time_serve_benchmark(args)
+        return
+    if args.mesh:
+        time_mesh_benchmark(args)
         return
     if args.kernel_step:
         time_kernel_train_step(args)

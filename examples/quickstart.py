@@ -113,3 +113,17 @@ print(f"packed-varlen: {T} rows vs {B * L} bucket-padded "
 for got, want in zip(per_cloud_vl, per_cloud):
     assert np.allclose(got, want, atol=1e-4)
 print("packed-varlen == bucket-padded, per cloud: OK")
+
+# 7. MULTI-DEVICE: the "sharded" backend shard_maps the same call over a
+#    mesh — balls are data-parallel, the small compressed K/V replicates.
+#    Still zero call-site changes; the mesh binds at trace time like any
+#    backend choice.  See docs/distributed.md.  (Run this file under
+#    XLA_FLAGS=--xla_force_host_platform_device_count=2 to fake devices.)
+from repro.distributed import mesh_context
+from repro.launch.mesh import make_local_mesh
+
+n_dev = min(2, len(jax.devices()))   # 512-token slice splits 2 ways cleanly
+with mesh_context(make_local_mesh(n_dev)), use_backend("sharded"):
+    out_sh = bsa_attention(params, qs, ks_, vs, cfg=cfg)
+assert np.allclose(np.asarray(out_ref), np.asarray(out_sh), atol=1e-4)
+print(f"sharded over {n_dev} device(s) == single-device: OK")

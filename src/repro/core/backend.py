@@ -164,6 +164,13 @@ class Backend(Protocol):
     def selection(self, q, k, v, top_idx, sel_valid, mask, *, block_size: int,
                   group_size: int, chunk_tokens: int = 0) -> jnp.ndarray: ...
 
+    # Backends MAY additionally accept ``q_valid=None`` on ``selection`` —
+    # unlike the flash hint this one is SEMANTIC when present: it supplies
+    # query-side validity separately from the key-sized ``mask`` so
+    # context-parallel callers can pass a local query slab (N) against the
+    # full key set (L > N).  Probed with :func:`accepts_kwarg`; the
+    # ``"sharded"`` backend only shards selection over inners that have it.
+
 
 # ---------------------------------------------------------------------------
 # Built-in: pure-jnp reference
@@ -227,10 +234,11 @@ class JnpBackend:
                                           chunk_blocks=cb)
 
     def selection(self, q, k, v, top_idx, sel_valid, mask, *, block_size,
-                  group_size, chunk_tokens=0):
+                  group_size, chunk_tokens=0, q_valid=None):
         from repro.core.branches import selection_attend
         return selection_attend(q, k, v, top_idx, sel_valid, mask,
-                                block_size=block_size, chunk_tokens=chunk_tokens)
+                                block_size=block_size, chunk_tokens=chunk_tokens,
+                                q_valid=q_valid)
 
     def gated_combine(self, outs, gates, mask):
         from repro.core.branches import gated_combine_ref
@@ -328,12 +336,13 @@ class PallasBackend:
                                            interpret=self.interpret)
 
     def selection(self, q, k, v, top_idx, sel_valid, mask, *, block_size,
-                  group_size, chunk_tokens=0):
+                  group_size, chunk_tokens=0, q_valid=None):
         from repro.kernels import ops as kops
         return kops.selection_attention(q, k, v, top_idx, sel_valid, mask,
                                         block_size=block_size,
                                         group_size=group_size,
-                                        interpret=self.interpret)
+                                        interpret=self.interpret,
+                                        q_valid=q_valid)
 
     def gated_combine(self, outs, gates, mask):
         from repro.kernels import ops as kops
@@ -411,6 +420,10 @@ def get_backend(name: str) -> Backend:
     """Look up a registered backend; ``"auto"`` resolves by platform."""
     if name == "auto":
         name = _auto_name()
+    if name == "sharded" and name not in _REGISTRY:
+        # lazy self-registration keeps core free of a distributed import
+        # unless the multi-device backend is actually requested
+        import repro.distributed.sharded_backend  # noqa: F401
     try:
         return _REGISTRY[name]
     except KeyError:

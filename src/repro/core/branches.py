@@ -233,23 +233,28 @@ def gather_attend_blocks(q_g, kb, vb, idx, sel_valid, tok_valid, scale_dim: int)
 
 
 def selection_attend(q, k, v, top_idx, sel_valid, mask, *, block_size: int,
-                     chunk_tokens: int = 0):
+                     chunk_tokens: int = 0, q_valid=None):
     """Orchestrates layout + optional chunking for the jnp selection branch.
 
-    q: (B,N,Hq,D); k/v: (B,N,Hkv,D); top_idx/sel_valid: (B,G,Hkv,k*);
+    q: (B,N,Hq,D); k/v: (B,L,Hkv,D); top_idx/sel_valid: (B,G,Hkv,k*);
     ``block_size`` is the KV block length ℓ, ``chunk_tokens`` the optional
-    query-memory bound.  Returns (B,N,Hq,D).
+    query-memory bound.  Returns (B,N,Hq,D).  L may exceed N (context-
+    parallel shards pass a local query slab against the full key set);
+    ``mask`` stays KEY-sized (B, L) and ``q_valid`` (B, N), when given,
+    supplies query-side validity separately — without it the key mask
+    doubles as the query mask (the classic N == L layout).
 
     Groups whose query tokens are ALL padded get their selections
     invalidated (→ exact zeros), matching the kernel path's dead-group
     skipping — so oracle and kernel agree bit-for-bit on padded rows."""
     from repro.kernels.occupancy import invalidate_dead_groups
-    sel_valid = invalidate_dead_groups(sel_valid, mask, q.shape[1])
+    sel_valid = invalidate_dead_groups(
+        sel_valid, q_valid if q_valid is not None else mask, q.shape[1])
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
     rep = Hq // Hkv
     ell = block_size
-    nb = N // ell
+    nb = k.shape[1] // ell
     G = top_idx.shape[1]
     g = N // G
     kb = k.reshape(B, nb, ell, Hkv, D).transpose(0, 3, 1, 2, 4)  # head-major
@@ -275,12 +280,16 @@ def selection_attend(q, k, v, top_idx, sel_valid, mask, *, block_size: int,
 
 
 def chunked_q_attention(q, k, v, *, key_valid=None, block_causal_ell: int = 0,
-                        chunk: int = 0, q_seg=None, k_seg=None):
+                        chunk: int = 0, q_seg=None, k_seg=None, pos0=0):
     """Dense attention of q vs (small) K/V with optional query chunking.
 
     q: (B,N,H,D); k/v: (B,L,H,D) same head count; key_valid: (B,L) bool.
     block_causal_ell>0 applies the compression-branch causal rule:
     query t attends key j iff (j+1)·ell − 1 < t.
+    ``pos0`` offsets ONLY that causal rule: a context-parallel shard whose
+    local row 0 sits at global position pos0 passes its shard offset (may be
+    a traced scalar, e.g. ``axis_index * n_local``) while ``q_seg`` indexing
+    stays local.  pos0 and q_seg are never used together.
     ``q_seg``/``k_seg`` (given together): (N,)/(L,) int32 segment ids shared
     across the batch — packed-varlen isolation, a query only attends keys of
     its own segment (``numerics.segment_ids_from_offsets``)."""
@@ -296,7 +305,7 @@ def chunked_q_attention(q, k, v, *, key_valid=None, block_causal_ell: int = 0,
         bias = base_bias
         if block_causal_ell:
             end = (jnp.arange(L) + 1) * block_causal_ell - 1
-            bias = bias + mask_to_bias(end[None, :] < pos[:, None])[None, None]
+            bias = bias + mask_to_bias(end[None, :] < (pos + pos0)[:, None])[None, None]
         if q_seg is not None:
             bias = bias + mask_to_bias(q_seg[pos][:, None] == k_seg[None, :])[None, None]
         return sdpa(qc, kh, vh, bias)

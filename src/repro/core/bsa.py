@@ -40,6 +40,7 @@ from repro.core.branches import (
     sdpa,
 )
 from repro.core.config import BSAConfig
+from repro.distributed.sharding import constrain
 from repro.numerics import segment_ids_from_offsets
 
 __all__ = ["bsa_init", "bsa_attention", "bsa_attention_varlen",
@@ -253,6 +254,14 @@ def bsa_attention(params: dict, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     in_dtype = q.dtype
     q, k, v = score_dtype_cast(cfg, q, k, v)
 
+    # logical-axis hints for the sharded backend / GSPMD: no-ops outside an
+    # axis_rules context (mesh_context enters one), so single-device runs
+    # are untouched; under a mesh the glue between shard_mapped ops keeps
+    # the sequence dim on the mesh axis instead of bouncing to replicated
+    q = constrain(q, "batch", "seq_sp", None, None)
+    k = constrain(k, "batch", "seq_sp", None, None)
+    v = constrain(v, "batch", "seq_sp", None, None)
+
     bk = resolve_branch_backends(cfg)
     out_ball = _ball_branch(q, k, v, mask, cfg, bk["ball"])
     out_cmp, k_cmp, v_cmp, blk_valid = _compression_branch(
@@ -266,6 +275,7 @@ def bsa_attention(params: dict, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     out = get_combine(bk["ball"])(
         (out_ball, out_cmp, out_slc),
         (gates["ball"], gates["cmp"], gates["slc"]), mask).astype(in_dtype)
+    out = constrain(out, "batch", "seq_sp", None, None)
     if return_aux:
         return out, {"ball": out_ball, "cmp": out_cmp, "slc": out_slc,
                      "indices": top_idx, "gates": gates}

@@ -49,6 +49,7 @@ from repro.core.branches import (
     sdpa,
 )
 from repro.core.config import BSAConfig
+from repro.distributed.sharding import constrain
 
 __all__ = [
     "nsa_init",
@@ -163,6 +164,12 @@ def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
     in_dtype = q.dtype
     q, k, v = score_dtype_cast(cfg, q, k, v)
 
+    # logical-axis hints for the sharded backend (no-op outside a mesh /
+    # axis_rules context) — keeps glue between shard_mapped ops seq-sharded
+    q = constrain(q, "batch", "seq_sp", None, None)
+    k = constrain(k, "batch", "seq_sp", None, None)
+    v = constrain(v, "batch", "seq_sp", None, None)
+
     bk = resolve_branch_backends(cfg)
     out_local = _local_branch(q, k, v, mask, cfg, bk["ball"])
 
@@ -191,6 +198,7 @@ def nsa_causal_attention(params, q, k, v, *, cfg: BSAConfig,
     out = get_combine(bk["ball"])(
         (out_local, out_cmp, out_slc),
         (gates["ball"], gates["cmp"], gates["slc"]), mask).astype(in_dtype)
+    out = constrain(out, "batch", "seq_sp", None, None)
     if return_aux:
         return out, {"local": out_local, "cmp": out_cmp, "slc": out_slc,
                      "indices": top_idx, "gates": gates}
@@ -294,10 +302,34 @@ def init_paged_decode_cache(num_blocks: int, page: int, n_kv_heads: int,
     }
 
 
+class _DensePoolOps:
+    """Single-device pool access for the paged decode (default semantics).
+
+    The decode core only touches the flat KV pools through these three ops;
+    the ``"sharded"`` backend swaps in row-partitioned versions (OOB-safe
+    local gathers + ``psum``, OOB-dropped local scatters) so the SAME core
+    runs with pools split across a mesh axis."""
+
+    def __init__(self, gather):
+        self._gather = gather
+
+    def gather(self, pool, rows):
+        # (R,Hkv,D), int rows → rows.shape + (Hkv,D)
+        return self._gather(pool, rows)
+
+    def gather_head(self, pool, rows, head_idx):
+        # per-head row gather: rows (B,Hkv,k*,ell), head_idx broadcastable
+        return pool[rows, head_idx]
+
+    def scatter_rows(self, pool, rows, vals):
+        return pool.at[rows].set(vals.astype(pool.dtype))
+
+
 def nsa_causal_decode_paged(params, q1, k1, v1, cache: dict,
                             table: jnp.ndarray, lengths: jnp.ndarray, *,
                             cfg: BSAConfig, page: int,
-                            x1: jnp.ndarray | None = None):
+                            x1: jnp.ndarray | None = None,
+                            _pool_ops=None):
     """One decode step over PAGED per-slot caches.
 
     q1: (B,1,Hq,D); k1,v1: (B,1,Hkv,D) for slot b's NEW token at position
@@ -316,6 +348,16 @@ def nsa_causal_decode_paged(params, q1, k1, v1, cache: dict,
     Returns (out (B,1,Hq,D), new_cache) — lengths are NOT advanced here;
     the host controller owns them.
     """
+    backend = resolve_branch_backends(cfg)["cmp"]
+    if _pool_ops is None and getattr(backend, "is_sharded_backend", False):
+        # re-enter through shard_map with row-partitioned pools; the inner
+        # call comes back here with _pool_ops set, so no recursion
+        from repro.distributed import sharded_backend as _sb
+        return _sb.sharded_paged_decode(backend, params, q1, k1, v1, cache,
+                                        table, lengths, cfg=cfg, page=page,
+                                        x1=x1)
+    ops = _pool_ops if _pool_ops is not None else _DensePoolOps(
+        get_paged_gather(backend))
     B, _, Hq, D = q1.shape
     Hkv = k1.shape[2]
     rep = Hq // Hkv
@@ -328,7 +370,6 @@ def nsa_causal_decode_paged(params, q1, k1, v1, cache: dict,
     if capacity < 2 * w:
         raise ValueError(f"slot capacity {capacity} < 2×local window {w}")
     t = lengths                               # (B,) position of each new token
-    gather = get_paged_gather(resolve_branch_backends(cfg)["cmp"])
 
     def row_of(pos):
         # (B, L) token positions → (B, L) token-pool rows via the table
@@ -342,25 +383,25 @@ def nsa_causal_decode_paged(params, q1, k1, v1, cache: dict,
 
     # --- cache update (token level): scatter each slot's new token ---
     wrow = row_of(t[:, None])[:, 0]                                 # (B,)
-    k_pool = cache["k"].at[wrow].set(k1[:, 0].astype(cache["k"].dtype))
-    v_pool = cache["v"].at[wrow].set(v1[:, 0].astype(cache["v"].dtype))
+    k_pool = ops.scatter_rows(cache["k"], wrow, k1[:, 0])
+    v_pool = ops.scatter_rows(cache["v"], wrow, v1[:, 0])
 
     # --- compressed update: slots whose new token completes a φ-block ---
     blk_id = t // ell
     complete = (t + 1) % ell == 0                                   # (B,)
     brows = row_of(blk_id[:, None] * ell + jnp.arange(ell)[None, :])  # (B,ell)
-    new_kc = phi_apply(params["phi_k"], k_pool[brows], None, cfg)   # (B,1,Hkv,D)
-    new_vc = phi_apply(params["phi_v"], v_pool[brows], None, cfg)
+    new_kc = phi_apply(params["phi_k"], ops.gather(k_pool, brows), None, cfg)
+    new_vc = phi_apply(params["phi_v"], ops.gather(v_pool, brows), None, cfg)
     crow = crow_of(blk_id[:, None])[:, 0]                           # (B,)
     # read-modify-write keeps non-completing slots' rows unchanged without
     # a per-slot conditional scatter (their row is exclusively owned)
     sel = complete[:, None, None]
     kc_val = jnp.where(sel, new_kc[:, 0].astype(cache["k_cmp"].dtype),
-                       cache["k_cmp"][crow])
+                       ops.gather(cache["k_cmp"], crow))
     vc_val = jnp.where(sel, new_vc[:, 0].astype(cache["v_cmp"].dtype),
-                       cache["v_cmp"][crow])
-    k_cmp = cache["k_cmp"].at[crow].set(kc_val)
-    v_cmp = cache["v_cmp"].at[crow].set(vc_val)
+                       ops.gather(cache["v_cmp"], crow))
+    k_cmp = ops.scatter_rows(cache["k_cmp"], crow, kc_val)
+    v_cmp = ops.scatter_rows(cache["v_cmp"], crow, vc_val)
 
     # --- local branch: per-slot blocked window [max(t//w-1,0)·w, t] ---
     start = jnp.maximum(t // w - 1, 0) * w                          # (B,)
@@ -368,8 +409,8 @@ def nsa_causal_decode_paged(params, q1, k1, v1, cache: dict,
     win_valid = pos <= t[:, None]
     # invalid positions still index allocated-or-trash pages (w | page), so
     # the gather is safe; the bias kills their contribution
-    k_win = gather(k_pool, row_of(pos))                             # (B,2w,Hkv,D)
-    v_win = gather(v_pool, row_of(pos))
+    k_win = ops.gather(k_pool, row_of(pos))                         # (B,2w,Hkv,D)
+    v_win = ops.gather(v_pool, row_of(pos))
     qh = q1.transpose(0, 2, 1, 3)                                   # (B,Hq,1,D)
     out_local = sdpa(qh, repeat_kv(k_win, rep).transpose(0, 2, 1, 3),
                      repeat_kv(v_win, rep).transpose(0, 2, 1, 3),
@@ -381,8 +422,8 @@ def nsa_causal_decode_paged(params, q1, k1, v1, cache: dict,
     blk_ok = jnp.arange(nb_max)[None, :] < jnp.where(
         complete, n_complete - 1, n_complete)[:, None]              # (B,NB)
     call = crow_of(jnp.broadcast_to(jnp.arange(nb_max)[None, :], (B, nb_max)))
-    kc_all = gather(k_cmp, call)                                    # (B,NB,Hkv,D)
-    vc_all = gather(v_cmp, call)
+    kc_all = ops.gather(k_cmp, call)                                # (B,NB,Hkv,D)
+    vc_all = ops.gather(v_cmp, call)
     out_cmp = sdpa(qh, repeat_kv(kc_all, rep).transpose(0, 2, 1, 3),
                    repeat_kv(vc_all, rep).transpose(0, 2, 1, 3),
                    mask_to_bias(blk_ok[:, None, None, :]))
@@ -405,8 +446,8 @@ def nsa_causal_decode_paged(params, q1, k1, v1, cache: dict,
     sel_pos = ig[..., None] * ell + jnp.arange(ell)                 # (B,Hkv,k*,ell)
     srows = row_of(sel_pos.reshape(B, Hkv * L)).reshape(B, Hkv, k_star, ell)
     head_idx = jnp.arange(Hkv)[None, :, None, None]
-    kg = k_pool[srows, head_idx].reshape(B, Hkv, L, D)
-    vg = v_pool[srows, head_idx].reshape(B, Hkv, L, D)
+    kg = ops.gather_head(k_pool, srows, head_idx).reshape(B, Hkv, L, D)
+    vg = ops.gather_head(v_pool, srows, head_idx).reshape(B, Hkv, L, D)
     key_valid = jnp.broadcast_to(sel_valid[..., None],
                                  (B, Hkv, k_star, ell)).reshape(B, Hkv, 1, L)
     qh2 = q1.reshape(B, 1, Hkv, rep, D).transpose(0, 2, 3, 1, 4).reshape(B, Hkv, rep, D)

@@ -4,3 +4,8 @@ from repro.distributed.sharding import (  # noqa: F401
     current_rules,
     logical_to_spec,
 )
+from repro.distributed.sharded_backend import (  # noqa: F401
+    ShardedBackend,
+    current_mesh_axis,
+    mesh_context,
+)

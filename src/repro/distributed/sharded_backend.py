@@ -1,0 +1,439 @@
+"""Multi-device attention backend: ``shard_map``ped BSA over a device mesh.
+
+The ``"sharded"`` backend wraps any inner single-device backend
+(``"jnp"`` / ``"pallas"`` / ``"interpret"``) and runs the four GQA-native
+ops of the backend protocol under :func:`jax.experimental.shard_map` on the
+mesh activated by :func:`mesh_context` — the distributed analogue of
+``use_backend()``:
+
+    with mesh_context(make_local_mesh()), use_backend("sharded"):
+        out = bsa_attention(params, q, k, v, cfg=cfg)   # no call-site change
+
+Per-branch sharding strategy (see docs/distributed.md for the full table):
+
+* ``ball`` — ball-axis DATA parallelism.  Balls are independent attention
+  units, so the sequence dim is sharded in ball-multiple chunks and the
+  inner backend runs unmodified per shard.  **No collectives.**
+* ``local_window`` — sequence sharded in window-multiple chunks plus a
+  one-block **halo exchange** (``lax.ppermute``): each shard receives its
+  left neighbour's last block of K/V so block 0 of the shard can attend its
+  previous block.  Shard 0's halo arrives zero-filled with an all-False
+  mask, which reproduces the reference's first-block rule exactly.
+* ``flash`` (compression branch) — CONTEXT parallelism: queries sharded,
+  the T/ℓ-small compressed K/V replicated (the implicit all-gather is
+  cheap by construction).  Softmax is psum-free — each query sees its full
+  key set locally.  The block-causal rule is position-dependent, so the
+  sharded path computes it from the reference math with a per-shard
+  ``pos0`` offset (``axis_index * n_local``) rather than the inner kernel,
+  whose grid parameters must be trace-static.
+* ``selection`` — queries, selected indices and validity sharded along the
+  group axis; K/V and the key mask replicated.  Requires an inner backend
+  whose ``selection`` accepts the ``q_valid`` kwarg (both built-ins do):
+  the key-sized mask can no longer double as the query mask when N < L.
+
+Gradients: ``shard_map``'s transpose rule psums cotangents of replicated
+inputs, so gathered-K/V grads are automatically reduce-scattered back to
+their owner shards — the fused ``custom_vjp`` backwards of the inner
+backend stay shard-correct with no extra code.
+
+Whenever an op cannot shard (indivisible sizes, missing ``q_valid``
+support, 1-device mesh) it falls back to the inner backend unsharded and
+warns ONCE per cause — numerics never change, only the partitioning.
+
+The module also provides :func:`sharded_paged_decode`: the paged NSA decode
+step with the KV pools row-partitioned across the mesh axis
+(``core.nsa_causal`` dispatches here when the resolved backend is sharded).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+import warnings
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.backend import (
+    accepts_kwarg,
+    get_backend,
+    list_backends,
+    register_backend,
+)
+from repro.distributed.sharding import axis_rules, logical_to_spec
+
+__all__ = [
+    "ShardedBackend",
+    "mesh_context",
+    "current_mesh_axis",
+    "sharded_paged_decode",
+]
+
+
+# ---------------------------------------------------------------------------
+# mesh_context — the distributed analogue of use_backend()
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+_WARNED: set = set()
+
+
+def _warn_once(op: str, reason: str) -> None:
+    key = (op, reason)
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(f"sharded backend: {op} falls back to the inner "
+                      f"backend unsharded — {reason}", RuntimeWarning,
+                      stacklevel=3)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, *, axis: str = "data", rules: dict | None = None):
+    """Activate ``mesh`` for the ``"sharded"`` backend (trace-time scoped).
+
+    ``axis`` names the mesh axis the sequence/ball dim is sharded over.
+    Also enters :func:`repro.distributed.sharding.axis_rules` so ``constrain``
+    annotations in ``core`` resolve against the same mesh: the merged rules
+    point ``seq_sp`` at ``axis`` and stop ``batch`` from grabbing it first
+    (override via ``rules`` for batch-parallel setups).
+    """
+    if axis not in mesh.shape:
+        raise ValueError(f"mesh_context: axis {axis!r} not in mesh axes "
+                         f"{tuple(mesh.shape)}")
+    merged = {"batch": None, "seq_sp": (axis,)}
+    if rules:
+        merged.update(rules)
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    stack.append((mesh, axis))
+    try:
+        with axis_rules(mesh, merged):
+            yield mesh
+    finally:
+        stack.pop()
+
+
+def current_mesh_axis():
+    """(mesh, axis) of the innermost active :func:`mesh_context`, or None."""
+    stack = getattr(_TLS, "stack", None)
+    return stack[-1] if stack else None
+
+
+# ---------------------------------------------------------------------------
+# shard_map plumbing helpers
+# ---------------------------------------------------------------------------
+
+def _shard_call(mesh, body, arg_specs, out_specs):
+    """shard_map with None-arg skipping.
+
+    ``arg_specs``: list of (array-or-None, PartitionSpec).  None entries are
+    closed over (shard_map cannot spec them) and re-inserted so ``body``
+    always receives the full positional list.
+    """
+    args = [a for a, _ in arg_specs if a is not None]
+    specs = tuple(s for a, s in arg_specs if a is not None)
+    present = [a is not None for a, _ in arg_specs]
+
+    def wrapper(*xs):
+        it = iter(xs)
+        return body(*[next(it) if pr else None for pr in present])
+
+    return shard_map(wrapper, mesh=mesh, in_specs=specs,
+                     out_specs=out_specs, check_rep=False)(*args)
+
+
+# ---------------------------------------------------------------------------
+# The backend
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBackend:
+    """shard_map wrapper around an inner backend (see module docstring).
+
+    ``inner`` pins the wrapped backend by name; None defers to the
+    ``REPRO_SHARDED_INNER`` env var, then ``"auto"`` (pallas on TPU, jnp
+    elsewhere).  The mesh is NOT stored here — it is resolved at trace time
+    from the ambient :func:`mesh_context`, exactly like ``use_backend``
+    resolves the backend name.
+    """
+
+    name: str = "sharded"
+    inner: str | None = None
+    requires_mesh = True         # engines fail fast without a mesh_context
+    is_sharded_backend = True    # decode dispatch marker (core.nsa_causal)
+
+    # -- resolution ---------------------------------------------------------
+
+    def _resolve_inner(self):
+        name = os.environ.get("REPRO_SHARDED_INNER") or self.inner or "auto"
+        if name == "sharded":
+            raise ValueError("the sharded backend cannot wrap itself "
+                             "(REPRO_SHARDED_INNER/inner must name a "
+                             "single-device backend)")
+        return get_backend(name)
+
+    def _require_mesh(self, op: str):
+        ctx = current_mesh_axis()
+        if ctx is None:
+            raise RuntimeError(
+                f"the 'sharded' backend needs an active mesh to run {op!r}; "
+                "wrap the call (or trace) in\n"
+                "    from repro.distributed import mesh_context\n"
+                "    from repro.launch.mesh import make_local_mesh\n"
+                "    with mesh_context(make_local_mesh()):\n"
+                "        ...\n"
+                "(on CPU, XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                "fakes a mesh for smoke runs)")
+        return ctx
+
+    def _plan(self, op: str, mesh, axis, n: int, granule: int = 1):
+        """Shard count p along ``axis`` if dim ``n`` can shard, else None.
+
+        Routes through ``logical_to_spec`` so divisibility failures surface
+        through its one-shot warning, then applies the op's granule rule
+        (per-shard length must stay a multiple of the ball/window size).
+        """
+        p = mesh.shape[axis]
+        if p == 1:
+            return None
+        spec = logical_to_spec(("seq_shard",), (n,), mesh,
+                               {"seq_shard": (axis,)})
+        if spec[0] is None:
+            _warn_once(op, f"dim {n} not divisible by mesh axis "
+                           f"{axis!r}={p}")
+            return None
+        if (n // p) % granule:
+            _warn_once(op, f"per-shard length {n // p} not a multiple of "
+                           f"granule {granule} (dim {n}, {axis!r}={p})")
+            return None
+        return p
+
+    # -- ops ----------------------------------------------------------------
+
+    def ball(self, q, k, v, mask, *, ball_size, chunk_tokens=0):
+        mesh, axis = self._require_mesh("ball")
+        inner = self._resolve_inner()
+        if self._plan("ball", mesh, axis, q.shape[1], ball_size) is None:
+            return inner.ball(q, k, v, mask, ball_size=ball_size,
+                              chunk_tokens=chunk_tokens)
+        seq = P(None, axis)
+
+        def body(q, k, v, m):
+            return inner.ball(q, k, v, m, ball_size=ball_size,
+                              chunk_tokens=chunk_tokens)
+
+        return _shard_call(mesh, body,
+                           [(q, seq), (k, seq), (v, seq), (mask, seq)], seq)
+
+    def local_window(self, q, k, v, *, window, mask=None, chunk_tokens=0):
+        mesh, axis = self._require_mesh("local_window")
+        inner = self._resolve_inner()
+        p = self._plan("local_window", mesh, axis, q.shape[1], window)
+        if p is None:
+            return inner.local_window(q, k, v, window=window, mask=mask,
+                                      chunk_tokens=chunk_tokens)
+        if mask is None:
+            mask = jnp.ones(q.shape[:2], bool)   # ones ≡ None numerically
+        seq = P(None, axis)
+        w = window
+        perm = [(i, i + 1) for i in range(p - 1)]   # shard 0 gets zero-fill
+
+        def body(q, k, v, m):
+            # halo exchange: left neighbour's last block, so this shard's
+            # block 0 can attend its previous block; the zero query block
+            # keeps the inner's blocked layout aligned and is sliced off
+            hk = jax.lax.ppermute(k[:, -w:], axis, perm)
+            hv = jax.lax.ppermute(v[:, -w:], axis, perm)
+            hm = jax.lax.ppermute(m[:, -w:].astype(jnp.int32), axis, perm) > 0
+            out = inner.local_window(
+                jnp.concatenate([jnp.zeros_like(q[:, :w]), q], axis=1),
+                jnp.concatenate([hk, k], axis=1),
+                jnp.concatenate([hv, v], axis=1),
+                window=w,
+                mask=jnp.concatenate([hm, m], axis=1),
+                chunk_tokens=chunk_tokens)
+            return out[:, w:]
+
+        return _shard_call(mesh, body,
+                           [(q, seq), (k, seq), (v, seq), (mask, seq)], seq)
+
+    def flash(self, q, k, v, *, key_valid=None, causal=False,
+              block_causal=False, ell=1, chunk_tokens=0, q_valid=None):
+        mesh, axis = self._require_mesh("flash")
+        inner = self._resolve_inner()
+        inner_kw = {}
+        if q_valid is not None and accepts_kwarg(inner.flash, "q_valid"):
+            inner_kw["q_valid"] = q_valid
+        if causal:
+            # token-causal flash is only the dense-baseline path; its
+            # position rule is not offset-parameterised in the inners
+            _warn_once("flash", "token-level causal not context-parallel")
+            return inner.flash(q, k, v, key_valid=key_valid, causal=True,
+                               block_causal=block_causal, ell=ell,
+                               chunk_tokens=chunk_tokens, **inner_kw)
+        N = q.shape[1]
+        p = self._plan("flash", mesh, axis, N)
+        if p is None:
+            return inner.flash(q, k, v, key_valid=key_valid,
+                               block_causal=block_causal, ell=ell,
+                               chunk_tokens=chunk_tokens, **inner_kw)
+        seq = P(None, axis)
+        n_loc = N // p
+
+        if block_causal:
+            # the block-causal rule depends on GLOBAL query position; the
+            # shard offset is traced (axis_index), which a kernel grid
+            # cannot take — so the sharded path computes the branch with
+            # the reference math + pos0 (exact parity with inner="jnp")
+            from repro.core.branches import chunked_q_attention, repeat_kv
+
+            def body(q, k, v, kv):
+                pos0 = jax.lax.axis_index(axis) * n_loc
+                rep = q.shape[2] // k.shape[2]
+                return chunked_q_attention(
+                    q, repeat_kv(k, rep), repeat_kv(v, rep), key_valid=kv,
+                    block_causal_ell=ell, chunk=chunk_tokens, pos0=pos0)
+        else:
+            def body(q, k, v, kv):
+                kw = dict(inner_kw)
+                if "q_valid" in kw:
+                    kw["q_valid"] = None   # global hint, wrong per shard
+                return inner.flash(q, k, v, key_valid=kv, ell=ell,
+                                   chunk_tokens=chunk_tokens, **kw)
+
+        return _shard_call(mesh, body,
+                           [(q, seq), (k, P()), (v, P()),
+                            (key_valid, P())], seq)
+
+    def selection(self, q, k, v, top_idx, sel_valid, mask, *, block_size,
+                  group_size, chunk_tokens=0, q_valid=None):
+        mesh, axis = self._require_mesh("selection")
+        inner = self._resolve_inner()
+        N, G = q.shape[1], top_idx.shape[1]
+        p = self._plan("selection", mesh, axis, N)
+        if p is not None and G % p:
+            _warn_once("selection", f"G={G} not divisible by {axis!r}={p}")
+            p = None
+        if p is not None and not accepts_kwarg(inner.selection, "q_valid"):
+            _warn_once("selection", f"inner backend {inner.name!r} has no "
+                       "q_valid support (needed to split query/key masks)")
+            p = None
+        if p is None:
+            return inner.selection(q, k, v, top_idx, sel_valid, mask,
+                                   block_size=block_size,
+                                   group_size=group_size,
+                                   chunk_tokens=chunk_tokens)
+        seq = P(None, axis)
+
+        def body(q, ti, sv, k, v, m, qv):
+            return inner.selection(q, k, v, ti, sv, m,
+                                   block_size=block_size,
+                                   group_size=group_size,
+                                   chunk_tokens=chunk_tokens, q_valid=qv)
+
+        return _shard_call(
+            mesh, body,
+            [(q, seq), (top_idx, seq), (sel_valid, seq),
+             (k, P()), (v, P()),
+             (mask, P()),          # key-token validity: replicated, full L
+             (mask, seq)],         # query validity: this shard's slice
+            seq)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-sharded paged decode (ServingEngine integration)
+# ---------------------------------------------------------------------------
+
+class _ShardedPoolOps:
+    """Row-partitioned pool access for the paged decode.
+
+    Pools are split along dim 0 into contiguous row blocks, one per shard.
+    Gathers read OOB-safe locally (``mode="fill"`` zeros for rows another
+    shard owns) and psum — exact, since every row has one nonzero
+    contributor.  Scatters drop non-owned rows (``mode="drop"``), so each
+    row is written only by its owner and no collective is needed.
+    """
+
+    def __init__(self, axis: str):
+        self.axis = axis
+
+    def _local(self, pool, rows):
+        # rows this shard does not own map to r_loc — PAST the local end, so
+        # fill/drop modes treat them as OOB.  (A bare negative index would
+        # WRAP per Python indexing semantics before the OOB check.)
+        r_loc = pool.shape[0]
+        li = rows - jax.lax.axis_index(self.axis) * r_loc
+        return jnp.where((li >= 0) & (li < r_loc), li, r_loc)
+
+    def gather(self, pool, rows):
+        g = pool.at[self._local(pool, rows)].get(mode="fill", fill_value=0)
+        return jax.lax.psum(g, self.axis)
+
+    def gather_head(self, pool, rows, head_idx):
+        hb = jnp.broadcast_to(head_idx, rows.shape)
+        g = pool.at[self._local(pool, rows), hb].get(mode="fill",
+                                                     fill_value=0)
+        return jax.lax.psum(g, self.axis)
+
+    def scatter_rows(self, pool, rows, vals):
+        return pool.at[self._local(pool, rows)].set(vals.astype(pool.dtype),
+                                                    mode="drop")
+
+
+def sharded_paged_decode(backend, params, q1, k1, v1, cache, table,
+                         lengths, *, cfg, page, x1=None):
+    """One paged NSA decode step with KV pools partitioned across the mesh.
+
+    Called from ``core.nsa_causal.nsa_causal_decode_paged`` when the
+    resolved backend is sharded.  The whole step runs under one
+    ``shard_map``: pools enter/leave row-sharded (``P(axis)``), everything
+    else (query, table, lengths, params) is replicated, and the attention
+    output is identical on every shard (gathers psum).  Requires the pool
+    row counts R and Rc to divide the mesh axis; otherwise falls back to
+    the dense single-device pool ops under the inner backend.
+    """
+    from repro.core import nsa_causal
+    from repro.core.backend import get_paged_gather
+
+    mesh, axis = backend._require_mesh("paged decode")
+    inner = backend._resolve_inner()
+    p = mesh.shape[axis]
+    R, Rc = cache["k"].shape[0], cache["k_cmp"].shape[0]
+    if p == 1 or R % p or Rc % p:
+        if p > 1:
+            _warn_once("paged decode", f"pool rows R={R}/Rc={Rc} not "
+                       f"divisible by {axis!r}={p}")
+        ops = nsa_causal._DensePoolOps(get_paged_gather(inner))
+        return nsa_causal.nsa_causal_decode_paged(
+            params, q1, k1, v1, cache, table, lengths, cfg=cfg, page=page,
+            x1=x1, _pool_ops=ops)
+
+    pool_ops = _ShardedPoolOps(axis)
+    pool_spec = {name: P(axis) for name in cache}
+
+    def body(params, q1, k1, v1, cache, table, lengths, x1):
+        return nsa_causal.nsa_causal_decode_paged(
+            params, q1, k1, v1, cache, table, lengths, cfg=cfg, page=page,
+            x1=x1, _pool_ops=pool_ops)
+
+    args = [(params, P()), (q1, P()), (k1, P()), (v1, P()),
+            (cache, pool_spec), (table, P()), (lengths, P()), (x1, P())]
+    arrs = [a for a, _ in args if a is not None]
+    specs = tuple(s for a, s in args if a is not None)
+    present = [a is not None for a, _ in args]
+
+    def wrapper(*xs):
+        it = iter(xs)
+        return body(*[next(it) if pr else None for pr in present])
+
+    return shard_map(wrapper, mesh=mesh, in_specs=specs,
+                     out_specs=(P(), pool_spec), check_rep=False)(*arrs)
+
+
+if "sharded" not in list_backends():       # idempotent on re-import paths
+    register_backend("sharded", ShardedBackend())

@@ -15,11 +15,16 @@ from __future__ import annotations
 
 import contextlib
 import threading
+import warnings
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _STATE = threading.local()
+
+# (logical name, mesh axes, dim, size) combos already warned about — the
+# divisibility fallback fires once per distinct cause, not once per trace
+_WARNED_REPLICATION: set = set()
 
 # logical axis -> mesh axis name(s); None = replicate
 DEFAULT_RULES = {
@@ -85,6 +90,17 @@ def logical_to_spec(logical_axes, shape, mesh, rules) -> P:
             spec.append(axes if len(axes) > 1 else axes[0])
             used.update(axes)
         else:
+            if axes and dim % size != 0:
+                # the used-axis fallback (axes filtered to empty) is
+                # structural and silent; a DIVISIBILITY miss is usually a
+                # shape bug, so name the culprit once
+                key = (name, axes, dim, size)
+                if key not in _WARNED_REPLICATION:
+                    _WARNED_REPLICATION.add(key)
+                    warnings.warn(
+                        f"logical axis {name!r} (dim {dim}) is not divisible "
+                        f"by mesh axes {axes} (size {size}); replicating "
+                        f"instead of sharding", RuntimeWarning, stacklevel=2)
             spec.append(None)
     return P(*spec)
 

@@ -237,25 +237,29 @@ def _local_half_live(key_bias, window, blk_seg=None):
 
 def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
                         block_size: int, group_size: int,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None, q_valid=None):
     """Group-selected sparse attention via the scalar-prefetch kernel.
 
-    q: (B, N, Hq, D); k, v: (B, N, Hkv, D) with Hq = Hkv·rep (GQA-native
+    q: (B, N, Hq, D); k, v: (B, L, Hkv, D) with Hq = Hkv·rep (GQA-native
     from day one: all rep query heads of a group share one fetched block
-    set, which is the point of group selection).
+    set, which is the point of group selection).  L may exceed N — the
+    kernel grid is independent in G and NB, so a context-parallel shard can
+    pass its local query slab against the full gathered key set.
     ``top_idx``/``sel_valid``: (B, G, Hkv, k*) — per query group and KV head,
     the selected coarse-block ids and their validity (invalid selections are
-    encoded as index −1 for the kernel and skipped).  ``mask``: (B, N) bool
+    encoded as index −1 for the kernel and skipped).  ``mask``: (B, L) bool
     or None — token validity of the GATHERED keys (padding inside a selected
-    block is masked in logit space).  ``block_size`` ℓ is the KV block
-    length; ``group_size`` g = N/G tokens per query group.  Returns
-    (B, N, Hq, D).  Differentiable in q, k, v (dK/dV are scatter-added back
-    through the gathered indices)."""
+    block is masked in logit space).  ``q_valid``: (B, N) bool or None —
+    query-side validity when it differs from the key mask (sharded callers);
+    defaults to ``mask`` under the classic N == L layout.  ``block_size``
+    ℓ is the KV block length; ``group_size`` g = N/G tokens per query group.
+    Returns (B, N, Hq, D).  Differentiable in q, k, v (dK/dV are
+    scatter-added back through the gathered indices)."""
     B, N, Hq, D = q.shape
     Hkv = k.shape[2]
     rep = Hq // Hkv
     ell = block_size
-    nb = N // ell
+    nb = k.shape[1] // ell
     G = top_idx.shape[1]
     g = N // G
 
@@ -264,7 +268,8 @@ def selection_attention(q, k, v, top_idx, sel_valid, mask, *,
            .reshape(B, Hkv, G, g * rep, D))
     kb = k.reshape(B, nb, ell, Hkv, D).transpose(0, 3, 1, 2, 4)   # (B,Hkv,NB,ℓ,D)
     vb = v.reshape(B, nb, ell, Hkv, D).transpose(0, 3, 1, 2, 4)
-    sel_valid = occupancy.invalidate_dead_groups(sel_valid, mask, N)
+    sel_valid = occupancy.invalidate_dead_groups(
+        sel_valid, q_valid if q_valid is not None else mask, N)
     idx = jnp.where(sel_valid, top_idx, -1).astype(jnp.int32)
     idx = idx.transpose(0, 2, 1, 3)                               # (B,Hkv,G,k*)
     if mask is None:

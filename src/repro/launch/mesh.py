@@ -22,7 +22,33 @@ def _axis_type_kwargs(n_axes: int) -> dict:
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    have = len(jax.devices())
+    if have < need:
+        raise RuntimeError(
+            f"make_production_mesh targets a {'2-pod ' if multi_pod else ''}"
+            f"16x16 v5e pod ({need} devices) but only {have} device(s) are "
+            "present; use make_local_mesh() (or make_mesh() with an explicit "
+            "shape) for smaller hosts")
     return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
+
+
+def make_local_mesh(n_data: int | None = None, *, axis: str = "data"):
+    """1-D mesh over however many devices actually exist.
+
+    The mesh the CPU smoke runs and the ``"sharded"`` attention backend use
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8`` fakes devices
+    for CI).  ``n_data`` takes the first n devices; default is all of them.
+    """
+    have = len(jax.devices())
+    n = n_data if n_data is not None else have
+    if n < 1 or n > have:
+        raise RuntimeError(
+            f"make_local_mesh(n_data={n}): {have} device(s) present")
+    return jax.make_mesh((n,), (axis,), devices=jax.devices()[:n],
+                         **_axis_type_kwargs(1))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):

@@ -49,13 +49,53 @@ from repro.launch.steps import (make_paged_serve_step, make_paged_serve_window,
 from repro.serving.paged_cache import PagedKVCache
 
 
-def _backend_scope(name: str | None):
+def _backend_scope(name: str | None, mesh_info=None):
     """Fresh context forcing attention backend ``name`` (None = config's).
 
     Backend resolution is TRACE-time, so wrapping every jitted call is
     enough: the first call bakes the backend into the compiled step and
-    later calls replay it."""
-    return use_backend(name) if name else contextlib.nullcontext()
+    later calls replay it.  ``mesh_info`` — a (mesh, axis) pair captured at
+    engine construction — re-enters :func:`mesh_context` around the call so
+    mesh-requiring backends resolve their mesh even when the engine is used
+    outside the user's original ``with mesh_context(...)`` block."""
+    stack = contextlib.ExitStack()
+    if name:
+        stack.enter_context(use_backend(name))
+    if mesh_info is not None:
+        from repro.distributed.sharded_backend import mesh_context
+        stack.enter_context(mesh_context(mesh_info[0], axis=mesh_info[1]))
+    return stack
+
+
+def _require_mesh_if_needed(backend_name: str | None, api, engine: str):
+    """(mesh, axis) when the engine's effective backend needs a mesh.
+
+    Fails fast at construction with an actionable error instead of crashing
+    inside ``shard_map`` at first trace.  Resolution mirrors the backend
+    precedence (config < engine override < env)."""
+    import os
+    eff = (os.environ.get("REPRO_ATTENTION_BACKEND") or backend_name
+           or getattr(api.mcfg.bsa, "backend", None) or "auto")
+    from repro.core.backend import get_backend
+    try:
+        bk = get_backend(eff)
+    except KeyError:
+        return None          # unknown names error later, in use_backend
+    if not getattr(bk, "requires_mesh", False):
+        return None
+    from repro.distributed.sharded_backend import current_mesh_axis
+    ctx = current_mesh_axis()
+    if ctx is None:
+        raise ValueError(
+            f"{engine}(backend={eff!r}) needs an active mesh: construct the "
+            "engine inside a mesh context, e.g.\n"
+            "    from repro.distributed import mesh_context\n"
+            "    from repro.launch.mesh import make_local_mesh\n"
+            "    with mesh_context(make_local_mesh()):\n"
+            f"        engine = {engine}(...)\n"
+            "(the engine captures the mesh, so later calls may happen "
+            "outside the with-block)")
+    return ctx
 
 
 class ServingEngine:
@@ -78,6 +118,9 @@ class ServingEngine:
         self.max_len = max_len
         self.temperature = temperature
         self.backend = backend          # attention-backend override (by name)
+        # fail fast (with a recipe) if a mesh-requiring backend was asked
+        # for outside mesh_context(); capture the mesh for later calls
+        self._mesh = _require_mesh_if_needed(backend, api, "ServingEngine")
         self.cache_dtype = cache_dtype
         self._rng = jax.random.PRNGKey(seed)
         self.paged = paged
@@ -94,6 +137,15 @@ class ServingEngine:
             self.page = page
             self.n_pages = max_len // page
             self.num_blocks = num_blocks or batch_slots * self.n_pages
+            if self._mesh is not None:
+                # sharded decode row-partitions the flat pools: bump the
+                # block count until both pool row counts divide the mesh
+                # axis (extra blocks only add headroom)
+                p = self._mesh[0].shape[self._mesh[1]]
+                cpp = page // api.mcfg.bsa.cmp_block
+                while ((self.num_blocks + 1) * page) % p or \
+                        ((self.num_blocks + 1) * cpp) % p:
+                    self.num_blocks += 1
             self._prefix_enabled = prefix_cache and not api.has_recurrent_state
             self._pstep = jax.jit(make_paged_serve_step(api, page=page))
             self._wstep = jax.jit(make_paged_serve_window(api, page=page))
@@ -131,7 +183,7 @@ class ServingEngine:
         Returns last logits' argmax (first generated token)."""
         assert prompts.shape[0] == self.B
         nxt = None
-        with _backend_scope(self.backend):
+        with _backend_scope(self.backend, self._mesh):
             for t in range(prompts.shape[1]):
                 tok = jnp.asarray(prompts[:, t], jnp.int32)
                 nxt, logits, self.caches = self._step(self.params, self.caches, tok)
@@ -160,7 +212,7 @@ class ServingEngine:
         self.tokens_generated += int((~done).sum())
         tok = jnp.asarray(emit)
         t0 = time.time()
-        with _backend_scope(self.backend):
+        with _backend_scope(self.backend, self._mesh):
             for _ in range(n_tokens - 1):
                 if done.all():
                     break
@@ -216,7 +268,7 @@ class ServingEngine:
         dev_table, tver = None, -1
         prev = None
         t0 = time.time()
-        with _backend_scope(self.backend):
+        with _backend_scope(self.backend, self._mesh):
             while queue or (slot_req >= 0).any():
                 # 1) admission into free slots (prefix-reuse aware)
                 for s in range(self.B):
@@ -322,7 +374,7 @@ class ServingEngine:
         dev_table, tver = None, -1
         prev = jnp.zeros(self.B, jnp.int32)
         t0 = time.time()
-        with _backend_scope(self.backend):
+        with _backend_scope(self.backend, self._mesh):
             while queue or (slot_req >= 0).any():
                 for s in range(self.B):          # admission into free slots
                     if slot_req[s] < 0 and queue:
@@ -427,6 +479,7 @@ class GeometryEngine:
         self.batch_slots = batch_slots
         self.pad_to = pad_to
         self.backend = backend          # attention-backend override (by name)
+        self._mesh = _require_mesh_if_needed(backend, api, "GeometryEngine")
         if layout is None:
             layout = "packed" if api.mcfg.attention == "bsa" else "padded"
         if layout not in ("packed", "padded"):
@@ -462,7 +515,7 @@ class GeometryEngine:
             feats, offsets, mask = pack_varlen(
                 ordered, self.ball_size, pad_to=self.pad_to,
                 max_samples=self.batch_slots)
-            with _backend_scope(self.backend):
+            with _backend_scope(self.backend, self._mesh):
                 pred = self._fwd(self.params,
                                  {"feats": jnp.asarray(feats)[None],
                                   "mask": jnp.asarray(mask)[None],
@@ -485,7 +538,7 @@ class GeometryEngine:
         feats, mask = pack_ragged(ordered, self.ball_size, pad_to=target)
         if pad_slots > 0:
             mask[len(chunk):] = False
-        with _backend_scope(self.backend):
+        with _backend_scope(self.backend, self._mesh):
             pred = self._fwd(self.params, {"feats": jnp.asarray(feats),
                                            "mask": jnp.asarray(mask)})
         per_cloud = unpack_ragged(np.asarray(pred), mask)[:len(chunk)]
