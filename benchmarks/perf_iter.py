@@ -532,11 +532,87 @@ def time_mesh_benchmark(args) -> None:
         "points_per_sec": round(pps_p, 1),
         "scaling_efficiency": round(eff, 3),
     }
+    if args.ring:
+        record["ring"] = _time_ring_leg(args, mesh, p, B, N, Hq, Hkv, D)
     if args.bench_json:
         Path(args.bench_json).write_text(json.dumps(record, indent=1) + "\n")
         print(f"# wrote {args.bench_json}", flush=True)
     if args.baseline:
         _check_regression(record, args.baseline, args.max_regression)
+
+
+def _time_ring_leg(args, mesh, p, B, N, Hq, Hkv, D) -> dict:
+    """§Ring context parallelism: one executed fwd+bwd NSA-causal step —
+    token-causal ring flash + ring selection, the two ops that used to fall
+    back — single device vs sharded, in the same invocation.  Alongside the
+    runner-speed-invariant scaling ratio the record stamps the ANALYTIC
+    invariants the ring buys: per-shard selection K/V bytes (1/p of the old
+    replicated strategy), the causal hop skip rate from the static
+    ``ring_hop_live`` table (~half of p² shard-hops), and the v5e ICI
+    roofline of one rotation cycle."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import emit, time_fn
+    from repro.core import BSAConfig
+    from repro.core.backend import use_backend
+    from repro.core.nsa_causal import nsa_causal_attention, nsa_init
+    from repro.distributed import mesh_context
+    from repro.kernels.occupancy import ring_hop_live
+    from repro.launch.mesh import ring_roofline_us
+
+    cfg = BSAConfig(ball_size=min(64, N), local_window=min(64, N),
+                    cmp_block=8, slc_block=8, top_k=4, group_size=8,
+                    backend=args.backend or "jnp")
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    params = nsa_init(ks[0], cfg, n_heads=Hq, n_kv_heads=Hkv, head_dim=D,
+                      d_model=Hq * D)
+    q = jax.random.normal(ks[1], (B, N, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[2], (B, N, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[3], (B, N, Hkv, D), jnp.float32)
+
+    def loss(p_, q, k, v):
+        return (nsa_causal_attention(p_, q, k, v, cfg=cfg) ** 2).sum() / N
+
+    step_1 = jax.jit(jax.value_and_grad(loss))
+    us_1 = time_fn(lambda *a: jax.block_until_ready(step_1(*a)),
+                   params, q, k, v, warmup=2, iters=5)
+    with mesh_context(mesh), use_backend("sharded"):
+        step_p = jax.jit(jax.value_and_grad(loss))
+        us_p = time_fn(lambda *a: jax.block_until_ready(step_p(*a)),
+                       params, q, k, v, warmup=2, iters=5)
+    n_pts = B * N
+    pps_1, pps_p = n_pts / (us_1 / 1e6), n_pts / (us_p / 1e6)
+    eff = pps_p / pps_1
+
+    live = ring_hop_live(p, N // p, causal=True)
+    hops_live, hops_total = int(live.sum()), p * p
+    # per-shard selection K/V residency: the old strategy all-gathered the
+    # full fp32 K+V; the ring keeps the local slab and rotates it
+    repl_bytes = 2 * B * N * Hkv * D * 4
+    ring_bytes = repl_bytes // p
+    emit(f"perf_iter/ring{p}_nsa_step_b{B}_n{N}", us_p,
+         f"points_per_sec={pps_p:.0f};single_dev={pps_1:.0f};"
+         f"scaling_efficiency={eff:.2f};hops={hops_live}/{hops_total};"
+         f"kv_bytes_per_shard={ring_bytes}")
+    print(f"# ring x{p} vs single device: {eff:.2f}x points/sec "
+          f"({pps_p:.0f} vs {pps_1:.0f}); causal hops {hops_live}/{hops_total}"
+          f" ({100 * hops_live // hops_total}%); selection K/V/shard "
+          f"{ring_bytes} vs {repl_bytes} replicated (1/{p})", flush=True)
+    return {
+        "single": {"us_per_step": round(us_1, 1),
+                   "points_per_sec": round(pps_1, 1)},
+        "sharded": {"us_per_step": round(us_p, 1),
+                    "points_per_sec": round(pps_p, 1)},
+        "scaling_efficiency": round(eff, 3),
+        "causal_hops": {"live": hops_live, "total": hops_total,
+                        "skip_pct": round(100 * (1 - hops_live / hops_total))},
+        "selection_kv_bytes_per_shard": {"ring": ring_bytes,
+                                         "replicated": repl_bytes,
+                                         "ratio": round(ring_bytes / repl_bytes, 4)},
+        "rotation_roofline_us_v5e": round(
+            ring_roofline_us(ring_bytes, p - 1), 2),
+    }
 
 
 def _check_regression(record: dict, baseline_path: str, max_regression: float):
@@ -569,6 +645,21 @@ def _check_regression(record: dict, baseline_path: str, max_regression: float):
                 f"sharded scaling regression: {eff:.2f} sharded/single is "
                 f"{(1 - ratio) * 100:.0f}% below baseline {base_eff:.2f} "
                 f"(allowed: {max_regression * 100:.0f}%)")
+        ring_eff = record.get("ring", {}).get("scaling_efficiency")
+        base_ring = base.get("sharded_ring", {}).get("scaling_efficiency")
+        if ring_eff and base_ring:
+            ratio = ring_eff / base_ring
+            print(f"# ring scaling efficiency vs baseline: {ratio:.2f}x "
+                  f"({ring_eff:.2f} vs {base_ring:.2f} sharded/single)",
+                  flush=True)
+            if ratio < 1.0 - max_regression:
+                raise SystemExit(
+                    f"ring scaling regression: {ring_eff:.2f} sharded/single "
+                    f"is {(1 - ratio) * 100:.0f}% below baseline "
+                    f"{base_ring:.2f} (allowed: {max_regression * 100:.0f}%)")
+        elif ring_eff:
+            print("# baseline has no sharded_ring.scaling_efficiency — "
+                  "ring gate skipped", flush=True)
         return
     if record.get("serving"):
         # gate on the paged/lockstep RATIO, not absolute tok/s: both modes
@@ -669,6 +760,11 @@ def main():
                          "'sharded' backend on an N-device local mesh; "
                          "--bench-json/--baseline gate the runner-speed-"
                          "invariant scaling_efficiency ratio")
+    ap.add_argument("--ring", action="store_true",
+                    help="with --mesh: also time an NSA-causal step (token-"
+                         "causal ring flash + ring selection) and record the "
+                         "sharded_ring entry — scaling efficiency, causal "
+                         "hop skip rate, per-shard selection K/V bytes")
     ap.add_argument("--serve", action="store_true",
                     help="time lockstep batches vs paged continuous batching "
                          "on a ragged request mix (useful tokens/sec; "

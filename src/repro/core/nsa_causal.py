@@ -302,13 +302,35 @@ def init_paged_decode_cache(num_blocks: int, page: int, n_kv_heads: int,
     }
 
 
+def _cmp_attend_from_rows(kc_all, vc_all, q1, blk_ok, rep):
+    """Reference compression-branch attention + selection block scores.
+
+    kc_all/vc_all (B, NB, Hkv, D) gathered compressed rows; q1 (B,1,Hq,D);
+    blk_ok (B, NB) bool.  Returns (out_cmp (B,Hq,1,D), scores (B,Hkv,NB)
+    fp32 with NEG_INF on dead blocks) — the dense semantics every
+    ``cmp_attend`` implementation must match."""
+    B, _, Hq, D = q1.shape
+    Hkv = kc_all.shape[2]
+    qh = q1.transpose(0, 2, 1, 3)                                   # (B,Hq,1,D)
+    out_cmp = sdpa(qh, repeat_kv(kc_all, rep).transpose(0, 2, 1, 3),
+                   repeat_kv(vc_all, rep).transpose(0, 2, 1, 3),
+                   mask_to_bias(blk_ok[:, None, None, :]))
+    qg = q1.reshape(B, 1, Hkv, Hq // Hkv, D)
+    s = jnp.einsum("bmkrd,bnkd->bkn", qg.astype(jnp.float32),
+                   kc_all.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) / (D ** 0.5)
+    s = jnp.where(blk_ok[:, None, :], s, NEG_INF)
+    return out_cmp, s
+
+
 class _DensePoolOps:
     """Single-device pool access for the paged decode (default semantics).
 
-    The decode core only touches the flat KV pools through these three ops;
+    The decode core only touches the flat KV pools through these ops;
     the ``"sharded"`` backend swaps in row-partitioned versions (OOB-safe
-    local gathers + ``psum``, OOB-dropped local scatters) so the SAME core
-    runs with pools split across a mesh axis."""
+    local gathers + ``psum``, OOB-dropped local scatters, a stats-merging
+    ``cmp_attend``) so the SAME core runs with pools split across a mesh
+    axis."""
 
     def __init__(self, gather):
         self._gather = gather
@@ -323,6 +345,12 @@ class _DensePoolOps:
 
     def scatter_rows(self, pool, rows, vals):
         return pool.at[rows].set(vals.astype(pool.dtype))
+
+    def cmp_attend(self, k_pool, v_pool, rows, q1, blk_ok, rep):
+        # gather the compressed rows, then the reference math
+        return _cmp_attend_from_rows(self.gather(k_pool, rows),
+                                     self.gather(v_pool, rows),
+                                     q1, blk_ok, rep)
 
 
 def nsa_causal_decode_paged(params, q1, k1, v1, cache: dict,
@@ -422,18 +450,12 @@ def nsa_causal_decode_paged(params, q1, k1, v1, cache: dict,
     blk_ok = jnp.arange(nb_max)[None, :] < jnp.where(
         complete, n_complete - 1, n_complete)[:, None]              # (B,NB)
     call = crow_of(jnp.broadcast_to(jnp.arange(nb_max)[None, :], (B, nb_max)))
-    kc_all = ops.gather(k_cmp, call)                                # (B,NB,Hkv,D)
-    vc_all = ops.gather(v_cmp, call)
-    out_cmp = sdpa(qh, repeat_kv(kc_all, rep).transpose(0, 2, 1, 3),
-                   repeat_kv(vc_all, rep).transpose(0, 2, 1, 3),
-                   mask_to_bias(blk_ok[:, None, None, :]))
+    # one hook covers the compressed-row consumption: the dense ops gather
+    # the rows and run the reference math; the sharded ops attend locally
+    # owned rows and merge (m, l, acc) stats instead of moving row values
+    out_cmp, s = ops.cmp_attend(k_cmp, v_cmp, call, q1, blk_ok, rep)
 
-    # --- selection branch ---
-    qg = q1.reshape(B, 1, Hkv, rep, D)
-    s = jnp.einsum("bmkrd,bnkd->bkn", qg.astype(jnp.float32),
-                   kc_all.astype(jnp.float32),
-                   preferred_element_type=jnp.float32) / (D ** 0.5)  # (B,Hkv,NB)
-    s = jnp.where(blk_ok[:, None, :], s, NEG_INF)
+    # --- selection branch (scores ``s`` (B,Hkv,NB) from cmp_attend) ---
     if cfg.force_first_block:
         s = s.at[..., 0].add(jnp.where(blk_ok[:, 0], -NEG_INF, 0.0)[:, None])
     k_star = min(cfg.top_k, nb_max)

@@ -4,6 +4,16 @@ from repro.distributed.sharding import (  # noqa: F401
     current_rules,
     logical_to_spec,
 )
+from repro.distributed.ring import (  # noqa: F401  (before sharded_backend:
+    SegmentPlan,                      # it imports repro.distributed.ring)
+    axis_layout,
+    lpt_partition,
+    plan_segments,
+    ring_flash,
+    ring_perm,
+    ring_selection,
+    round_robin_partition,
+)
 from repro.distributed.sharded_backend import (  # noqa: F401
     ShardedBackend,
     current_mesh_axis,

@@ -51,6 +51,12 @@ DEFAULT_RULES = {
 }
 
 
+def reset_replication_warnings() -> None:
+    """Clear the one-shot divisibility-warning registry (test isolation —
+    pairs with ``sharded_backend.reset_warnings``)."""
+    _WARNED_REPLICATION.clear()
+
+
 def _get():
     return getattr(_STATE, "ctx", None)
 

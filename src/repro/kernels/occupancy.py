@@ -35,6 +35,7 @@ jit (tracers carry no counts) and when no recorder is active.
 from __future__ import annotations
 
 import contextlib
+import functools
 import threading
 
 import jax
@@ -44,8 +45,10 @@ import numpy as np
 from repro.numerics import NEG_INF
 
 __all__ = ["key_tile_live", "query_tile_live", "causal_tile_live",
+           "ring_hop_live",
            "flash_live_map", "tile_seg_ranges", "ranges_overlap",
            "ranges_live_map", "group_live", "invalidate_dead_groups",
+           "offsets_digest", "cached_varlen_maps",
            "record_occupancy", "record"]
 
 
@@ -89,6 +92,23 @@ def causal_tile_live(n_q: int, n_k: int, tq: int, tk: int, *,
     return ok
 
 
+def ring_hop_live(p: int, n_loc: int, *, causal: bool = False,
+                  block_causal: bool = False, ell: int = 1) -> np.ndarray:
+    """Static (p, p) bool hop liveness for the ring-rotation schedule.
+
+    ``live[i, h]``: does hop ``h`` contribute anything on shard ``i``?  Hop
+    ``h`` leaves shard ``i`` holding the K/V slab originated by shard
+    ``(i − h) mod p``, so this is exactly :func:`causal_tile_live` at tile
+    size ``n_loc`` (shard slabs ARE tiles) reindexed from (q-tile i,
+    k-tile src) to (shard i, hop h).  Token-causal: live iff ``h ≤ i`` —
+    ``p(p+1)/2`` of ``p²`` hops, the ~half-work claim of the causal ring."""
+    tl = causal_tile_live(p, p, n_loc, n_loc, causal=causal,
+                          block_causal=block_causal, ell=ell)
+    i = np.arange(p)[:, None]
+    h = np.arange(p)[None, :]
+    return tl[i, (i - h) % p]
+
+
 def flash_live_map(key_bias: jnp.ndarray, tq: int, tk: int, n_q: int, *,
                    q_valid: jnp.ndarray | None = None, causal: bool = False,
                    block_causal: bool = False, ell: int = 1) -> jnp.ndarray:
@@ -124,6 +144,57 @@ def ranges_live_map(qrng: jnp.ndarray, krng: jnp.ndarray) -> jnp.ndarray:
     bool — what the varlen grid will actually run (used for auditing)."""
     return ((krng[0][None, :] <= qrng[1][:, None])
             & (qrng[0][:, None] <= krng[1][None, :]))
+
+
+# ---------------------------------------------------------------------------
+# cached varlen maps — ragged steps reuse identical host-side precomputes
+# ---------------------------------------------------------------------------
+
+def offsets_digest(offsets):
+    """Hashable identity of a CONCRETE offsets array (tuple of ints), or
+    None when ``offsets`` is a tracer — the cache key's ragged half."""
+    if isinstance(offsets, jax.core.Tracer):
+        return None
+    return tuple(int(x) for x in np.asarray(offsets).reshape(-1))
+
+
+@functools.lru_cache(maxsize=128)
+def _varlen_maps(q_key: tuple, k_key: tuple, Tp: int, Lp: int,
+                 tq: int, tk: int):
+    """Numpy twin of the per-call map build in ``ops.flash_attention_varlen``
+    (segment ids via searchsorted + per-tile [min, max] ranges), memoised on
+    (offsets digest, tile config) so repeated ragged steps with the same
+    batch layout stop rebuilding identical maps every invocation."""
+
+    def seg_ids(key, length):
+        bounds = np.asarray(key, np.int32)[1:]
+        return np.searchsorted(bounds, np.arange(length, dtype=np.int32),
+                               side="right").astype(np.int32)
+
+    def ranges(seg, tile):
+        blocks = seg.reshape(-1, tile)
+        return np.stack([blocks[:, 0], blocks[:, -1]]).astype(np.int32)
+
+    qseg = seg_ids(q_key, Tp)
+    kseg = seg_ids(k_key, Lp)
+    return qseg, kseg, ranges(qseg, tq), ranges(kseg, tk)
+
+
+def cached_varlen_maps(q_offsets, k_offsets, Tp: int, Lp: int,
+                       tq: int, tk: int):
+    """(qseg, kseg, qrng, krng) for the varlen kernel's scalar prefetch.
+
+    Concrete offsets hit the host-side LRU (numpy, hashable digests);
+    tracers fall back to the traced jnp build — same arrays either way."""
+    qd, kd = offsets_digest(q_offsets), offsets_digest(k_offsets)
+    if qd is not None and kd is not None:
+        qseg, kseg, qrng, krng = _varlen_maps(qd, kd, Tp, Lp, tq, tk)
+        return (jnp.asarray(qseg), jnp.asarray(kseg),
+                jnp.asarray(qrng), jnp.asarray(krng))
+    from repro.numerics import segment_ids_from_offsets
+    qseg = segment_ids_from_offsets(q_offsets, Tp)
+    kseg = segment_ids_from_offsets(k_offsets, Lp)
+    return qseg, kseg, tile_seg_ranges(qseg, tq), tile_seg_ranges(kseg, tk)
 
 
 def group_live(mask: jnp.ndarray, n_groups: int) -> jnp.ndarray:

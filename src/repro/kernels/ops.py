@@ -344,11 +344,11 @@ def flash_attention_varlen(q, k, v, q_offsets, k_offsets, *, key_valid=None,
 
     # positions at/after offsets[-1] (capacity + tile padding) get segment id
     # S, which matches no real sample — padded queries and keys are mutually
-    # invisible to real ones by the in-kernel equality test
-    qseg = segment_ids_from_offsets(q_offsets, Tp)
-    kseg = segment_ids_from_offsets(k_offsets, Lp)
-    qrng = occupancy.tile_seg_ranges(qseg, tq)
-    krng = occupancy.tile_seg_ranges(kseg, tk)
+    # invisible to real ones by the in-kernel equality test.  Concrete
+    # offsets resolve through the host-side LRU (one build per batch layout
+    # instead of one per call); tracers take the jnp path inside
+    qseg, kseg, qrng, krng = occupancy.cached_varlen_maps(
+        q_offsets, k_offsets, Tp, Lp, tq, tk)
     occupancy.record("varlen_flash", occupancy.ranges_live_map(qrng, krng))
 
     out = flash_attention_varlen_kernel_call(

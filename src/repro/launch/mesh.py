@@ -59,3 +59,15 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s
 ICI_BW_PER_LINK = 50e9          # B/s per link
+
+
+def ring_roofline_us(bytes_per_hop: int, hops: int,
+                     links: int = 1) -> float:
+    """ICI time (µs) of a ring-attention schedule on the roofline model.
+
+    Each hop pushes one K/V slab to the ring neighbour over ``links`` ICI
+    links; hops overlap with compute in steady state, so this is the lower
+    bound the per-hop compute must exceed for the rotation to be free
+    (``benchmarks/perf_iter.py --ring`` stamps it next to the measured
+    ratios)."""
+    return hops * bytes_per_hop / (links * ICI_BW_PER_LINK) * 1e6

@@ -6,6 +6,8 @@ These are THE functions the dry-run lowers and the trainer/server jit.
 from __future__ import annotations
 
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 
@@ -13,12 +15,25 @@ from repro.optim import adamw_update, clip_by_global_norm, cosine_schedule
 
 
 def make_train_step(api, *, base_lr=1e-3, weight_decay=0.01, total_steps=100_000,
-                    warmup_steps=1000, max_grad_norm=1.0):
-    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+                    warmup_steps=1000, max_grad_norm=1.0, mesh_info=None):
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    ``mesh_info`` — an optional ``(mesh, axis)`` pair.  When given, the loss
+    (and its backward) is traced inside :func:`mesh_context`, so a
+    ``"sharded"`` backend resolves the mesh even when the step is jitted
+    from a scope that no longer holds the context (trainers capture the
+    mesh once at build time, same as ``ServingEngine``)."""
+
+    def _scope():
+        if mesh_info is None:
+            return contextlib.nullcontext()
+        from repro.distributed import mesh_context
+        return mesh_context(mesh_info[0], axis=mesh_info[1])
 
     def train_step(params, opt_state, batch):
-        (loss, metrics), grads = jax.value_and_grad(api.loss, has_aux=True)(
-            params, batch)
+        with _scope():
+            (loss, metrics), grads = jax.value_and_grad(
+                api.loss, has_aux=True)(params, batch)
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
         lr = cosine_schedule(opt_state["step"], base_lr=base_lr,
                              total_steps=total_steps, warmup_steps=warmup_steps)

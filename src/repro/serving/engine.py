@@ -461,6 +461,13 @@ class GeometryEngine:
       per-sample masks; required for non-BSA attention mechanisms, whose
       layers don't take offsets.
 
+    With ``backend="sharded"`` the ``"packed"`` layout's offsets reach the
+    varlen ops as TRACED values (they are jitted batch data here), so the
+    host-side LPT segment planner cannot run and those ops warn once and
+    fall back to the inner backend unsharded — by design; use the
+    ``"padded"`` layout (ring-sharded dense ops) when mesh scaling of
+    geometry serving matters.  See docs/distributed.md.
+
     ``pad_to`` freezes the compiled length (use the dataset's
     ``max_padded_len`` when the size range is known): the per-slot padded
     length in ``"padded"`` layout, the TOTAL packed capacity in

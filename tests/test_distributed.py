@@ -359,31 +359,43 @@ def test_sharded_backend_parity_8dev():
             return max(jax.tree.leaves(jax.tree.map(
                 lambda x, y: float(jnp.abs(x - y).max()), a, b)))
 
-        for name, fn, p in [("bsa", bsa_attention, bparams),
-                            ("nsa", nsa_causal_attention, nparams)]:
-            for m in (None, mask):
-                def loss(p, q, k, v):
-                    o = fn(p, q, k, v, cfg=cfg, mask=m)
-                    return (o ** 2).sum() / N       # O(1) grads: atol is
+        with warnings.catch_warnings(record=True) as wrec:
+            warnings.simplefilter("always")
+            for name, fn, p in [("bsa", bsa_attention, bparams),
+                                ("nsa", nsa_causal_attention, nparams)]:
+                for m in (None, mask):
+                    def loss(p, q, k, v):
+                        o = fn(p, q, k, v, cfg=cfg, mask=m)
+                        return (o ** 2).sum() / N   # O(1) grads: atol is
                                                      # a ~1e-5 RELATIVE bar
-                ref_o = fn(p, q, k, v, cfg=cfg, mask=m)
-                ref_g = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))(p, q, k, v)
-                with mesh_context(mesh), use_backend("sharded"):
-                    sh_o = jax.jit(lambda p, q, k, v: fn(
-                        p, q, k, v, cfg=cfg, mask=m))(p, q, k, v)
-                    sh_g = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))(p, q, k, v)
-                eo, eg = tree_err(ref_o, sh_o), tree_err(ref_g, sh_g)
-                tag = "dense" if m is None else "ragged"
-                print(name, tag, "fwd", eo, "grad", eg)
-                assert eo < 1e-5 and eg < 1e-5, (name, tag, eo, eg)
+                    ref_o = fn(p, q, k, v, cfg=cfg, mask=m)
+                    ref_g = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))(p, q, k, v)
+                    with mesh_context(mesh), use_backend("sharded"):
+                        sh_o = jax.jit(lambda p, q, k, v: fn(
+                            p, q, k, v, cfg=cfg, mask=m))(p, q, k, v)
+                        sh_g = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))(p, q, k, v)
+                    eo, eg = tree_err(ref_o, sh_o), tree_err(ref_g, sh_g)
+                    tag = "dense" if m is None else "ragged"
+                    print(name, tag, "fwd", eo, "grad", eg)
+                    assert eo < 1e-5 and eg < 1e-5, (name, tag, eo, eg)
+        # every op (incl. token-causal flash + selection, once fallbacks)
+        # must now shard on divisible shapes — zero falls-back warnings
+        assert not any("falls back" in str(x.message) for x in wrec), \\
+            [str(x.message) for x in wrec]
 
-        # packed-varlen seam: sharded falls back to the jnp oracle ops
+        # packed-varlen seam: now SEGMENT-SHARDED (LPT re-layout), not a
+        # fallback — parity must hold with no falls-back warning at all
         offs = jnp.array([0, 256, 448, 512], jnp.int32)
         qp, kp, vp = q[0], k[0], v[0]
         ref_vl = bsa_attention_varlen(bparams, qp, kp, vp, cfg=cfg, offsets=offs)
         with mesh_context(mesh), use_backend("sharded"):
-            sh_vl = bsa_attention_varlen(bparams, qp, kp, vp, cfg=cfg, offsets=offs)
-        assert float(jnp.abs(ref_vl - sh_vl).max()) < 1e-6
+            with warnings.catch_warnings(record=True) as w:
+                warnings.simplefilter("always")
+                sh_vl = bsa_attention_varlen(bparams, qp, kp, vp, cfg=cfg,
+                                             offsets=offs)
+            assert not any("falls back" in str(x.message) for x in w), \\
+                [str(x.message) for x in w]
+        assert float(jnp.abs(ref_vl - sh_vl).max()) < 1e-5
 
         # indivisible sequence → warn-once fallback, numerics unchanged
         from repro.core.backend import get_backend
@@ -436,3 +448,222 @@ def test_sharded_serve_decode_parity_8dev():
         print("SERVE_PARITY_OK")
     """)
     assert "SERVE_PARITY_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# ring context parallelism (8 fake devices, subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_ring_flash_parity_8dev():
+    """ring_flash (causal + non-causal, ragged key mask) vs the unsharded
+    jnp oracle: fwd AND full grads within atol 1e-5, with the causal hop
+    table skipping ~half the hops."""
+    out = _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core.backend import get_backend
+        from repro.distributed import ring
+        from repro.launch.mesh import make_local_mesh
+        from repro.kernels import occupancy
+        from repro.numerics import key_padding_bias
+
+        mesh, axis, p = make_local_mesh(8), "data", 8
+        rng = np.random.default_rng(0)
+        B, N, Hq, Hkv, D = 2, 128, 4, 2, 16
+        q = jnp.asarray(rng.normal(size=(B, N, Hq, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, N, Hkv, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, N, Hkv, D)), jnp.float32)
+        mask = jnp.asarray(rng.random((B, N)) > 0.2)
+        kb = key_padding_bias(mask, B, N)
+        jb = get_backend("jnp")
+        seq = P(None, axis)
+
+        for causal in (True, False):
+            live = occupancy.ring_hop_live(p, N // p, causal=causal)
+            assert live.sum() == (p * (p + 1) // 2 if causal else p * p)
+
+            def run(q, k, v):
+                body = lambda q, k, v, kb: ring.ring_flash(
+                    q, k, v, kb, axis=axis, p=p, causal=causal, live=live)
+                return shard_map(body, mesh=mesh,
+                                 in_specs=(seq, seq, seq, seq),
+                                 out_specs=seq, check_rep=False)(q, k, v, kb)
+
+            ref = jb.flash(q, k, v, key_valid=mask, causal=causal)
+            e = float(jnp.abs(run(q, k, v) - ref).max())
+            w = jnp.asarray(np.random.default_rng(1).normal(size=ref.shape))
+            g1 = jax.grad(lambda q, k, v: (run(q, k, v) * w).sum(),
+                          argnums=(0, 1, 2))(q, k, v)
+            g2 = jax.grad(lambda q, k, v: (jb.flash(
+                q, k, v, key_valid=mask, causal=causal) * w).sum(),
+                argnums=(0, 1, 2))(q, k, v)
+            ge = max(float(jnp.abs(a - b).max()) for a, b in zip(g1, g2))
+            print("causal", causal, "fwd", e, "grad", ge)
+            assert e < 1e-5 and ge < 1e-5, (causal, e, ge)
+        print("RING_FLASH_OK")
+    """)
+    assert "RING_FLASH_OK" in out
+
+
+@pytest.mark.slow
+def test_ring_selection_parity_8dev():
+    """ring_selection (sharded+rotating selection K/V, indices re-based to
+    ring-local coordinates) vs the replicated jnp oracle, fwd + grads."""
+    out = _run("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core.backend import get_backend
+        from repro.distributed import ring
+        from repro.launch.mesh import make_local_mesh
+
+        mesh, axis, p = make_local_mesh(8), "data", 8
+        rng = np.random.default_rng(0)
+        B, N, Hq, Hkv, D = 2, 128, 4, 2, 16
+        ell, g, k_star = 8, 16, 4
+        G, nb = N // g, N // ell
+        q = jnp.asarray(rng.normal(size=(B, N, Hq, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, N, Hkv, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, N, Hkv, D)), jnp.float32)
+        mask = jnp.asarray(rng.random((B, N)) > 0.2)
+        ti = jnp.asarray(rng.integers(0, nb, size=(B, G, Hkv, k_star)), jnp.int32)
+        sv = jnp.asarray(rng.random((B, G, Hkv, k_star)) > 0.25)
+        jb = get_backend("jnp")
+        seq = P(None, axis)
+
+        def run(q, k, v):
+            body = lambda q, ti, sv, k, v, m, qv: ring.ring_selection(
+                q, k, v, ti, sv, m, qv, axis=axis, p=p,
+                block_size=ell, group_size=g)
+            return shard_map(body, mesh=mesh,
+                             in_specs=(seq,) * 7, out_specs=seq,
+                             check_rep=False)(q, ti, sv, k, v, mask, mask)
+
+        ref = jb.selection(q, k, v, ti, sv, mask, block_size=ell, group_size=g)
+        e = float(jnp.abs(run(q, k, v) - ref).max())
+        w = jnp.asarray(np.random.default_rng(1).normal(size=ref.shape))
+        g1 = jax.grad(lambda q, k, v: (run(q, k, v) * w).sum(),
+                      argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(lambda q, k, v: (jb.selection(
+            q, k, v, ti, sv, mask, block_size=ell, group_size=g) * w).sum(),
+            argnums=(0, 1, 2))(q, k, v)
+        ge = max(float(jnp.abs(a - b).max()) for a, b in zip(g1, g2))
+        print("fwd", e, "grad", ge)
+        assert e < 1e-5 and ge < 1e-5, (e, ge)
+        print("RING_SEL_OK")
+    """)
+    assert "RING_SEL_OK" in out
+
+
+@pytest.mark.slow
+def test_segment_sharded_varlen_parity_8dev():
+    """All four packed-varlen ops on the sharded backend (LPT segment
+    re-layout, zero collectives) vs the unsharded jnp oracle — fwd + a
+    grad probe, with NO falls-back warning on divisible sizes."""
+    out = _run("""
+        import warnings
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.core.backend import get_backend
+        from repro.distributed import mesh_context
+        from repro.launch.mesh import make_local_mesh
+
+        mesh = make_local_mesh(8)
+        rng = np.random.default_rng(0)
+        T, Hq, Hkv, D = 512, 4, 2, 16
+        offs = (0, 256, 320, 448, 512)
+        offsets = jnp.asarray(offs, jnp.int32)
+        q = jnp.asarray(rng.normal(size=(T, Hq, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(T, Hkv, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(T, Hkv, D)), jnp.float32)
+        m = jnp.asarray(rng.random(T) > 0.1)
+        jb, sb = get_backend("jnp"), get_backend("sharded")
+        ell, g, k_star, ball = 8, 16, 4, 64
+        k_off = offsets // ell
+        kc = jnp.asarray(rng.normal(size=(T // ell, Hkv, D)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(T // ell, Hkv, D)), jnp.float32)
+        blkv = jnp.asarray(rng.random(T // ell) > 0.1)
+        Gv = T // g
+        so = np.searchsorted(np.asarray(offs)[1:], np.arange(Gv) * g, "right")
+        lo = np.asarray(offs)[so] // ell
+        span = np.maximum(np.asarray(offs)[so + 1] // ell - lo, 1)
+        ti = jnp.asarray(lo[:, None, None] + rng.integers(
+            0, 1000, size=(Gv, Hkv, k_star)) % span[:, None, None], jnp.int32)
+        sv = jnp.asarray(rng.random((Gv, Hkv, k_star)) > 0.25)
+
+        cases = [
+            ("ball", lambda b: b.ball_varlen(q, k, v, offsets, m,
+                                             ball_size=ball)),
+            ("flash", lambda b: b.flash_varlen(q, kc, vc, offsets, k_off,
+                                               key_valid=blkv)),
+            ("window", lambda b: b.local_window_varlen(q, k, v, offsets,
+                                                       window=32, mask=m)),
+            ("sel", lambda b: b.selection_varlen(q, k, v, ti, sv, offsets,
+                                                 m, block_size=ell,
+                                                 group_size=g)),
+        ]
+        with mesh_context(mesh):
+            with warnings.catch_warnings(record=True) as w:
+                warnings.simplefilter("always")
+                for name, fn in cases:
+                    e = float(jnp.abs(fn(sb) - fn(jb)).max())
+                    print(name, e)
+                    assert e < 1e-5, (name, e)
+                gq1 = jax.grad(lambda q_: (sb.ball_varlen(
+                    q_, k, v, offsets, m, ball_size=ball) ** 2).sum())(q)
+            assert not any("falls back" in str(x.message) for x in w), \\
+                [str(x.message) for x in w]
+        gq2 = jax.grad(lambda q_: (jb.ball_varlen(
+            q_, k, v, offsets, m, ball_size=ball) ** 2).sum())(q)
+        assert float(jnp.abs(gq1 - gq2).max()) < 1e-5
+        print("VARLEN_OK")
+    """)
+    assert "VARLEN_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# LPT segment partitioner + warn-once keying (single device, pure logic)
+# ---------------------------------------------------------------------------
+
+def test_lpt_beats_round_robin_on_skew():
+    from repro.distributed import plan_segments, round_robin_partition
+    # skewed ragged batch: one giant segment + many small ones.  Cost is
+    # quadratic in segment length, which round-robin's index-order deal
+    # gets badly wrong.
+    sizes = (512, 64, 64, 64, 64, 64, 64, 64, 64, 64)
+    lpt = plan_segments(tuple(np.cumsum((0,) + sizes).tolist()), 4)
+    rr = plan_segments(tuple(np.cumsum((0,) + sizes).tolist()), 4,
+                       partition=round_robin_partition)
+    # cost_balance = max shard load / mean load (1.0 = perfect)
+    assert lpt.cost_balance < rr.cost_balance
+    # LPT puts the giant segment alone on one shard
+    giant_shard = lpt.assign[0]
+    assert all(a != giant_shard for a in lpt.assign[1:])
+
+
+def test_plan_segments_is_cached():
+    from repro.distributed import plan_segments
+    a = plan_segments((0, 128, 256), 2)
+    b = plan_segments((0, 128, 256), 2)
+    assert a is b
+
+
+def test_warn_once_keys_on_op_and_reason():
+    import warnings
+    from repro.distributed.sharded_backend import _warn_once, reset_warnings
+    reset_warnings()
+    # two DISTINCT causes for one op must BOTH warn ...
+    with pytest.warns(RuntimeWarning, match="indivisible-dim"):
+        _warn_once("flash", "indivisible-dim", "seq 100 % 8 != 0")
+    with pytest.warns(RuntimeWarning, match="causal-qk-mismatch"):
+        _warn_once("flash", "causal-qk-mismatch", "N=1 != L=64")
+    # ... while a repeat of the same (op, code) stays silent, even with a
+    # different dynamic detail string
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        _warn_once("flash", "indivisible-dim", "seq 204 % 8 != 0")
+    reset_warnings()

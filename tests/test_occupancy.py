@@ -489,3 +489,38 @@ def test_dead_key_bias_matches_neg_inf_contract():
     kb = kb.at[0, 127].set(0.0)
     np.testing.assert_array_equal(
         np.asarray(occupancy.key_tile_live(kb, 64))[0], [False, True])
+
+
+def test_ring_hop_live_token_causal_rule():
+    from repro.kernels.occupancy import ring_hop_live
+    p = 8
+    live = ring_hop_live(p, 16, causal=True)
+    # hop h on shard i holds the slab of shard (i-h) mod p; token-causal
+    # keeps exactly the hops that stay at-or-behind the local slab: h <= i
+    i = np.arange(p)[:, None]
+    h = np.arange(p)[None, :]
+    assert np.array_equal(live, h <= i)
+    assert live.sum() == p * (p + 1) // 2          # ~half of p*p hops
+    # non-causal: every hop contributes
+    assert ring_hop_live(p, 16).all()
+
+
+def test_cached_varlen_maps_lru_and_parity():
+    from repro.kernels.occupancy import (_varlen_maps, cached_varlen_maps,
+                                         offsets_digest, tile_seg_ranges)
+    from repro.numerics import segment_ids_from_offsets
+    offs = jnp.asarray([0, 96, 128], jnp.int32)
+    _varlen_maps.cache_clear()
+    qseg, kseg, qrng, krng = cached_varlen_maps(offs, offs, 128, 128, 32, 32)
+    assert _varlen_maps.cache_info().misses == 1
+    cached_varlen_maps(offs, offs, 128, 128, 32, 32)
+    assert _varlen_maps.cache_info().hits == 1      # second call is a hit
+    # cached numpy build == the traced jnp build
+    ref_seg = segment_ids_from_offsets(offs, 128)
+    assert np.array_equal(np.asarray(qseg), np.asarray(ref_seg))
+    assert np.array_equal(np.asarray(qrng),
+                          np.asarray(tile_seg_ranges(ref_seg, 32)))
+    # tracers bypass the cache (digest None) but produce the same arrays
+    assert offsets_digest(offs) == (0, 96, 128)
+    traced = jax.jit(lambda o: cached_varlen_maps(o, o, 128, 128, 32, 32)[0])(offs)
+    assert np.array_equal(np.asarray(traced), np.asarray(ref_seg))
